@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference.
+
+Wall time in interpret mode is NOT TPU performance (the kernel body runs
+in python); the figure of merit here is (a) correctness at benchmark
+shapes and (b) the jnp-reference throughput, which IS executed by XLA CPU
+and scales with the same arithmetic the TPU kernel performs.
+
+derived: checks kernel==ref; reports elements/s of the jnp path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.intersect.ref import SENTINEL, intersect_count_ref
+from repro.kernels.triangle_dense.ref import triangle_count_ref
+from repro.kernels.intersect.ops import intersect_count
+from repro.kernels.triangle_dense.ops import triangle_count
+
+from .common import emit, timeit
+
+RNG = np.random.default_rng(0)
+
+
+def main(fast: bool = False) -> None:
+    # triangle_dense
+    n, d = (256, 1024) if fast else (512, 2048)
+    a = (RNG.random((n, d)) < 0.05).astype(np.float32)
+    m = np.ones((n, n), np.float32)
+    aj = jnp.asarray(a)
+    mj = jnp.asarray(m)
+    want = float(triangle_count_ref(aj, aj, mj))
+    got = float(triangle_count(a, a, m, use_pallas=True))
+    us = timeit(lambda: triangle_count_ref(aj, aj, mj).block_until_ready())
+    flops = 2 * n * n * d
+    emit("kernel_triangle_dense", us,
+         f"match={abs(got-want)<1e-2};gflops_ref={flops/us/1e3:.2f}")
+
+    # intersect
+    e, k = (2048, 128) if fast else (8192, 256)
+    def rows():
+        out = np.full((e, k), SENTINEL, np.int32)
+        for i in range(e):
+            nn = RNG.integers(0, k)
+            out[i, :nn] = np.sort(RNG.choice(k * 4, nn, replace=False))
+        return out
+    A, Bm = rows(), rows()
+    Aj, Bj = jnp.asarray(A), jnp.asarray(Bm)
+    got = np.asarray(intersect_count(A, Bm, use_pallas=True))
+    want = np.asarray(intersect_count_ref(Aj, Bj))
+    us = timeit(lambda: intersect_count_ref(Aj, Bj).block_until_ready())
+    emit("kernel_intersect", us,
+         f"match={bool((got==want).all())};rows_per_s={e/us*1e6:.0f}")
+
+    # embedding_bag
+    v, dd, b, l = (20000, 64, 1024, 8) if fast else (100000, 128, 4096, 8)
+    tab = RNG.standard_normal((v, dd)).astype(np.float32)
+    idx = RNG.integers(0, v, (b, l)).astype(np.int32)
+    tj, ij = jnp.asarray(tab), jnp.asarray(idx)
+    us = timeit(lambda: embedding_bag_ref(tj, ij).block_until_ready())
+    emit("kernel_embedding_bag", us,
+         f"lookups_per_s={b*l/us*1e6:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Roofline report: reads results/dryrun/*.json, prints the §Roofline table.
+
+Per (arch × shape × single-pod mesh): the three terms in seconds, the
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and per-device peak bytes. Also emits
+one CSV row per cell (name,us_per_call,derived) where us_per_call is the
+dominant term (the projected step time if the dominant resource were the
+only cost — the roofline lower bound).
+
+Run after ``python -m repro.launch.dryrun --all``.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+DEFAULT_DIR = Path("results/dryrun")
+
+
+def load(dry_dir: Path = DEFAULT_DIR, mesh: str = "single"):
+    rows = []
+    for p in sorted(dry_dir.glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r.get("ok"):
+            rows.append(r)
+    return rows
+
+
+def fmt_table(rows) -> str:
+    hdr = (f"{'arch':26s} {'shape':14s} {'t_comp(s)':>10s} {'t_mem(s)':>10s} "
+           f"{'t_coll(s)':>10s} {'bound':>6s} {'useful':>7s} {'GB/dev':>7s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        gb = (r.get("temp_size_in_bytes", 0) +
+              r.get("argument_size_in_bytes", 0)) / 2**30
+        out.append(
+            f"{r['arch']:26s} {r['shape']:14s} "
+            f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
+            f"{r['t_collective_s']:10.4f} {r['bottleneck'][:6]:>6s} "
+            f"{min(9.99, r.get('useful_flops_ratio', 0)):7.3f} {gb:7.2f}")
+    return "\n".join(out)
+
+
+def main(fast: bool = False, dry_dir: Path = DEFAULT_DIR) -> None:
+    rows = load(dry_dir)
+    if not rows:
+        print("no dry-run artifacts found; run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    print(fmt_table(rows))
+    for r in rows:
+        dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(f"roofline/{r['arch']}/{r['shape']}", dom * 1e6,
+             f"bound={r['bottleneck']};useful={r.get('useful_flops_ratio',0):.3f};"
+             f"coll_gb={r['collective_bytes_per_device']/2**30:.2f}")
+
+
+if __name__ == "__main__":
+    main()

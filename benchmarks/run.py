@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §6).
+
+  fig7   boxing CPU overhead + box counts      (benchmarks.boxing_overhead)
+  fig9   vanilla vs boxed block I/Os + Prop.4  (benchmarks.vanilla_vs_boxed)
+  fig11  boxed LFTJ vs specialized MGT         (benchmarks.lftj_vs_mgt)
+  thm17  arboricity scaling of LFTJ-Δ          (benchmarks.arboricity_scaling)
+  kernels Pallas kernels vs references          (benchmarks.kernel_bench)
+  roofline per-cell roofline terms from dry-run (benchmarks.roofline)
+
+Prints ``name,us_per_call,derived`` CSV. ``--fast`` shrinks sizes;
+``--only fig9`` runs a single suite.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (arboricity_scaling, boxing_overhead, kernel_bench,
+                   lftj_vs_mgt, roofline, vanilla_vs_boxed)
+
+    suites = {
+        "fig7": boxing_overhead.main,
+        "fig9": vanilla_vs_boxed.main,
+        "fig11": lftj_vs_mgt.main,
+        "thm17": arboricity_scaling.main,
+        "kernels": kernel_bench.main,
+        "roofline": roofline.main,
+    }
+    names = [args.only] if args.only else list(suites)
+    print("name,us_per_call,derived")
+    for n in names:
+        t0 = time.time()
+        print(f"# --- {n} ---", flush=True)
+        suites[n](fast=args.fast)
+        print(f"# {n} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: the public triangle-listing API in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (BlockDevice, TrieArray, boxed_triangle_count,
+                        count_triangles, list_triangles, orient_edges,
+                        Atom, Query, run_query)
+from repro.data.graphs import rmat_graph
+
+
+def main():
+    # 1. make a graph (the paper's RMAT synthetic dataset, scaled down)
+    src, dst = rmat_graph(n_nodes=1 << 12, n_edges=50_000, seed=0)
+    print(f"graph: {len(src)} edges")
+
+    # 2. count triangles — every altitude agrees
+    for method in ("vectorized", "faithful", "dense", "mgt"):
+        print(f"  {method:11s}: {count_triangles(src, dst, method=method, mem_words=1 << 14)}")
+
+    # 3. list them
+    tri = list_triangles(src, dst)
+    print(f"  listed {len(tri)} triangles; first: {tri[0].tolist() if len(tri) else '—'}")
+
+    # 4. out-of-core: budget memory at 10% of the input, watch the boxes
+    a, b = orient_edges(src, dst)
+    ta = TrieArray.from_edges(a, b)
+    dev = BlockDevice(block_words=64, cache_blocks=ta.words() // 10 // 64)
+    dev.register_triearray(ta)
+    cnt, stats = boxed_triangle_count(ta, ta.words() // 10, block_words=64,
+                                      device=dev)
+    print(f"boxed @10% memory: {cnt} triangles, {stats.n_boxes} boxes, "
+          f"{dev.stats.block_reads} block I/Os "
+          f"({stats.provisioned_words / ta.words():.1f}x input provisioned)")
+
+    # 5. LFTJ is general-purpose: any full-conjunctive query (paths, here)
+    rels = {"E": ta}
+    q = Query(("x", "y", "z"),
+              [Atom("E", ("x", "y")), Atom("E", ("y", "z"))])
+    n_paths = run_query(q, ["x", "y", "z"], rels)
+    print(f"2-paths via the same engine: {n_paths}")
+
+
+if __name__ == "__main__":
+    main()

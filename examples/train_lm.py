@@ -1,0 +1,92 @@
+"""End-to-end LM training example with checkpoint/restart.
+
+Default is a ~10M-parameter Qwen2-style model sized for this CPU
+container; ``--full-100m`` selects the ~100M configuration that the same
+driver trains on accelerators (documented run: a few hundred steps).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --steps 200 --resume
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.transformer import LayerSpec, TransformerConfig
+
+
+def config(full_100m: bool) -> TransformerConfig:
+    if full_100m:
+        return TransformerConfig(
+            name="lm-100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=4, d_head=64, d_ff=2048, vocab=32768, qkv_bias=True,
+            pattern=(LayerSpec(),))
+    return TransformerConfig(
+        name="lm-10m", n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+        d_head=32, d_ff=768, vocab=8192, qkv_bias=True,
+        pattern=(LayerSpec(),))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    L.set_dtypes(jnp.float32, jnp.float32)
+    cfg = config(args.full_100m)
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.data.pipeline import Prefetcher
+    from repro.data.tokens import TokenStream
+    from repro.models import transformer as M
+    from repro.optim import adamw
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = cfg.params_count()
+    print(f"model: {cfg.name}, {n_params/1e6:.1f}M params")
+
+    opt_cfg = adamw.AdamWConfig(lr=6e-4, warmup_steps=20,
+                                total_steps=args.steps)
+    opt = adamw.init(params)
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    if args.resume and mgr.latest_step() is not None:
+        (params, opt), start = mgr.restore((params, opt))
+        print(f"resumed at step {start}")
+
+    stream = TokenStream(cfg.vocab, seed=0)
+    batches = Prefetcher(
+        (stream.batch(args.batch, args.seq)
+         for _ in range(args.steps - start)), depth=2)
+
+    @jax.jit
+    def step(p, o, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch), has_aux=True)(p)
+        p, o, m = adamw.apply(opt_cfg, p, g, o)
+        return p, o, loss
+
+    import time
+    t0 = time.time()
+    for i, b in enumerate(batches, start=start):
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, loss = step(params, opt, b)
+        if i % 20 == 0 or i == args.steps - 1:
+            tok_s = args.batch * args.seq * (i - start + 1) / (time.time() - t0)
+            print(f"step {i:4d} loss {float(loss):.4f} ({tok_s:,.0f} tok/s)")
+        if (i + 1) % 50 == 0:
+            mgr.save(i + 1, (params, opt))
+    mgr.save(args.steps, (params, opt))
+    mgr.wait()
+    print(f"done; checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

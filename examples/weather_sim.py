@@ -1,0 +1,79 @@
+"""GraphCast on its native icosahedral multimesh (beyond-assignment extra).
+
+Builds the refinement-r multimesh, synthesizes grid states, runs the
+encoder-processor-decoder a few training steps of one-step-ahead
+forecasting (targets = diffused current state).
+
+    PYTHONPATH=src python examples/weather_sim.py --refinement 3
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--refinement", type=int, default=3)
+    ap.add_argument("--vars", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=15)
+    args = ap.parse_args()
+
+    L.set_dtypes(jnp.float32, jnp.float32)
+    from repro.configs import get_arch
+    from repro.data.graphs import icosahedral_mesh
+    from repro.models import gnn as G
+    from repro.optim import adamw
+
+    verts, src, dst = icosahedral_mesh(args.refinement)
+    n = len(verts)
+    print(f"multimesh r={args.refinement}: {n} nodes, {len(src)} edges")
+
+    rng = np.random.default_rng(0)
+    # smooth synthetic atmospheric state: low-order spherical harmonics-ish
+    state = np.tanh(verts @ rng.standard_normal((3, args.vars))).astype(np.float32)
+    # target: one diffusion step along mesh edges (a simple but nontrivial
+    # local dynamical operator the EPD stack must learn)
+    agg = np.zeros_like(state)
+    np.add.at(agg, dst, state[src])
+    np.add.at(agg, src, state[dst])
+    deg = np.bincount(np.concatenate([src, dst]), minlength=n)[:, None]
+    target = 0.7 * state + 0.3 * agg / np.maximum(deg, 1)
+
+    cfg = dataclasses.replace(get_arch("graphcast").smoke_config,
+                              d_in=args.vars, d_out=args.vars, n_layers=4)
+    params = G.init_params(cfg, jax.random.PRNGKey(0))
+    edge_feat = np.concatenate(
+        [verts[src] - verts[dst],
+         np.linalg.norm(verts[src] - verts[dst], axis=1, keepdims=True)],
+        axis=1).astype(np.float32)
+    batch = {"node_feat": jnp.asarray(state),
+             "edge_src": jnp.asarray(src, jnp.int32),
+             "edge_dst": jnp.asarray(dst, jnp.int32),
+             "edge_feat": jnp.asarray(edge_feat),
+             "edge_mask": jnp.ones(len(src)), "node_mask": jnp.ones(n),
+             "targets": jnp.asarray(target)}
+
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=3, total_steps=args.steps)
+    opt = adamw.init(params)
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(
+            lambda p: G.loss_fn(cfg, p, batch)[0])(p)
+        p, o, _ = adamw.apply(opt_cfg, p, g, o)
+        return p, o, loss
+
+    for i in range(args.steps):
+        params, opt, loss = step(params, opt)
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:3d} forecast MSE {float(loss):.5f}")
+
+
+if __name__ == "__main__":
+    main()

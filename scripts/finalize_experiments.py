@@ -1,0 +1,28 @@
+"""Regenerate the §Roofline table inside EXPERIMENTS.md from results/dryrun."""
+
+import re
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from benchmarks.roofline import fmt_table, load  # noqa: E402
+
+
+def main():
+    rows = load(Path("results/dryrun"))
+    table = "```\n" + fmt_table(rows) + "\n```"
+    p = Path("EXPERIMENTS.md")
+    s = p.read_text()
+    if "<!-- ROOFLINE_TABLE -->" in s:
+        s = s.replace("<!-- ROOFLINE_TABLE -->", table)
+    else:
+        # replace a previously inserted table (between the §Roofline header
+        # fence markers)
+        s = re.sub(r"```\narch .*?\n```", table, s, count=1, flags=re.S)
+    p.write_text(s)
+    print(f"roofline table refreshed: {len(rows)} rows")
+
+
+if __name__ == "__main__":
+    main()

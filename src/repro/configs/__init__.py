@@ -1,0 +1,22 @@
+"""Architecture registry (one module per assigned arch + paper workload)."""
+
+from .base import (REGISTRY, ArchBundle, ShapeSpec, all_arch_ids,
+                   config_for_shape, get_arch, input_specs)
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    from . import (deepseek_v2_236b, dlrm_mlperf, gcn_cora, gin_tu,  # noqa
+                   graphcast, llama4_maverick, qwen15_32b, qwen2_7b,
+                   schnet, yi_6b)
+    _LOADED = True
+
+
+_load_all()
+
+__all__ = ["REGISTRY", "ArchBundle", "ShapeSpec", "all_arch_ids",
+           "config_for_shape", "get_arch", "input_specs"]

@@ -1,0 +1,27 @@
+"""Core library: the paper's contribution (LFTJ + boxing + triangle listing)."""
+
+from .triearray import SPILL, TrieArray, TrieArraySlice
+from .leapfrog import (Atom, LeapfrogJoin, LeapfrogTriejoin, TrieIterator,
+                       lftj_triangle_count, triangle_query_atoms)
+from .boxing import (BoxedLFTJ, BoxingConfig, BoxStats, boxed_triangle_count,
+                     plan_boxes)
+from .iomodel import BlockDevice, CountingReader, IOStats
+from .lftj_jax import (csr_from_edges, orient_edges, pad_neighbors,
+                       triangle_count_boxed_vectorized, triangle_count_dense,
+                       triangle_count_vectorized)
+from .mgt import mgt_triangle_count
+from .queries import Query, best_rank, build_indexes, rank_for_order, run_query
+from .triangle import brute_force_count, count_triangles, list_triangles
+from .adversarial import adversarial_graph
+
+__all__ = [
+    "SPILL", "TrieArray", "TrieArraySlice", "Atom", "LeapfrogJoin",
+    "LeapfrogTriejoin", "TrieIterator", "lftj_triangle_count",
+    "triangle_query_atoms", "BoxedLFTJ", "BoxingConfig", "BoxStats",
+    "boxed_triangle_count", "plan_boxes", "BlockDevice", "CountingReader",
+    "IOStats", "csr_from_edges", "orient_edges", "pad_neighbors",
+    "triangle_count_boxed_vectorized", "triangle_count_dense",
+    "triangle_count_vectorized", "mgt_triangle_count", "Query", "best_rank",
+    "build_indexes", "rank_for_order", "run_query", "brute_force_count",
+    "count_triangles", "list_triangles", "adversarial_graph",
+]

@@ -1,0 +1,121 @@
+"""Block-granular I/O cost model (paper §1 'Model & Assumptions').
+
+The container is CPU-only, so instead of timing a disk we *count* block I/Os
+in the paper's own model: data lives on a virtual block device with block
+size ``B`` words; an access to a word not resident in the ``M/B``-frame
+cache costs one I/O; the replacement policy is LRU (what Prop. 4's
+adversarial construction targets).
+
+numpy views share memory with their base buffer, so registering the *base*
+array by data pointer makes every slice/view alias the correct device
+blocks automatically — provisioning reads of a TrieArraySlice are charged to
+the region of the source TrieArray, exactly like a DMA from disk.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class IOStats:
+    block_reads: int = 0
+    block_writes: int = 0
+    word_reads: int = 0
+    probes: int = 0
+
+    def reset(self):
+        self.block_reads = self.block_writes = self.word_reads = self.probes = 0
+
+
+class BlockDevice:
+    """Virtual block device + LRU buffer cache, counting block I/Os."""
+
+    def __init__(self, block_words: int = 4096, cache_blocks: int = 1024):
+        self.B = int(block_words)
+        self.cache_blocks = int(cache_blocks)
+        self._regions = {}          # base data ptr -> (start_word, n_words, itemsize)
+        self._next_word = 0
+        self._cache: OrderedDict = OrderedDict()  # block id -> True
+        self.stats = IOStats()
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, arr: np.ndarray) -> None:
+        base = arr.base if arr.base is not None else arr
+        while isinstance(base, np.ndarray) and base.base is not None:
+            base = base.base
+        ptr = base.__array_interface__["data"][0]
+        if ptr in self._regions:
+            return
+        n_words = base.size
+        self._regions[ptr] = (self._next_word, n_words, base.itemsize)
+        # round region starts to block boundaries (file layout)
+        self._next_word += n_words
+        self._next_word = ((self._next_word + self.B - 1) // self.B) * self.B
+
+    def register_triearray(self, ta) -> None:
+        for a in list(ta.val) + list(ta.idx):
+            if len(a):
+                self.register(a)
+
+    def _word_addr(self, arr: np.ndarray, i: int) -> int:
+        base = arr.base if arr.base is not None else arr
+        while isinstance(base, np.ndarray) and base.base is not None:
+            base = base.base
+        bptr = base.__array_interface__["data"][0]
+        start, n, itemsize = self._regions[bptr]
+        off_bytes = arr.__array_interface__["data"][0] - bptr
+        return start + off_bytes // itemsize + i
+
+    # -- accounting ---------------------------------------------------------
+
+    def _touch_block(self, blk: int) -> None:
+        cache = self._cache
+        if blk in cache:
+            cache.move_to_end(blk)
+            return
+        self.stats.block_reads += 1
+        cache[blk] = True
+        if len(cache) > self.cache_blocks:
+            cache.popitem(last=False)
+
+    def touch(self, arr: np.ndarray, i: int) -> None:
+        """Random access to element i of a registered (view of an) array."""
+        self.stats.word_reads += 1
+        self._touch_block(self._word_addr(arr, i) // self.B)
+
+    def read_range(self, arr: np.ndarray, lo: int, hi: int) -> None:
+        """Sequential read of arr[lo:hi] (slice provisioning DMA)."""
+        if hi <= lo:
+            return
+        a = self._word_addr(arr, lo) // self.B
+        b = self._word_addr(arr, hi - 1) // self.B
+        for blk in range(a, b + 1):
+            self._touch_block(blk)
+        self.stats.word_reads += hi - lo
+
+    def write_words(self, n_words: int) -> None:
+        """Append-only output stream (counts ceil(n/B) over time)."""
+        self.stats.block_writes += (n_words + self.B - 1) // self.B
+
+    def clear_cache(self) -> None:
+        self._cache.clear()
+
+
+class CountingReader:
+    """Accessor handed to TrieIterators: reads an element, charging the device.
+
+    ``None`` device = pure in-memory execution (no accounting).
+    """
+
+    def __init__(self, device: BlockDevice | None = None):
+        self.device = device
+
+    def get(self, arr: np.ndarray, i: int):
+        if self.device is not None:
+            self.device.touch(arr, i)
+        return int(arr[i])

@@ -1,0 +1,229 @@
+"""Vectorized LFTJ-Δ in JAX (the TPU-native altitude; DESIGN.md §2.2).
+
+The level-z leapfrog joins of LFTJ-Δ compute |D(x) ∩ D(y)| for every edge
+(x, y) of the DAG orientation (paper Alg. 1). We batch *all* of them into a
+data-parallel primitive over fixed shapes:
+
+  * neighbor lists padded to K = max out-degree, sorted, sentinel-terminated;
+  * per edge, the smaller list is probed into the larger via binary search —
+    exactly the min(d_x, d_y) accounting of Thm. 17, so the vectorized form
+    inherits the O(|E| · α(G) · log) work bound (the padding waste is bounded
+    by degree binning / boxing);
+  * a `lax.scan` over edge chunks keeps peak memory at O(chunk · K).
+
+`triangle_count_dense` is the MXU formulation used for dense boxes:
+Σ A ⊙ (A Aᵀ) over 0/1 tiles (kernels/triangle_dense implements it in Pallas).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SENTINEL = np.iinfo(np.int32).max
+
+
+# ---------------------------------------------------------------------------
+# host-side graph preparation (numpy)
+# ---------------------------------------------------------------------------
+
+def orient_edges(src: np.ndarray, dst: np.ndarray,
+                 mode: str = "minmax") -> Tuple[np.ndarray, np.ndarray]:
+    """Make the undirected graph a DAG (paper §2.3 G*).
+
+    'minmax'  — (min, max) per edge: the paper's orientation.
+    'degree'  — lower-degree endpoint first (ties by id): the standard
+                out-degree ≤ O(√|E|) bound; a beyond-paper option that caps
+                the padded width K (§Perf hillclimb #1).
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if mode == "minmax":
+        a = np.minimum(src, dst)
+        b = np.maximum(src, dst)
+    elif mode == "degree":
+        n = int(max(src.max(initial=0), dst.max(initial=0))) + 1
+        deg = np.bincount(src, minlength=n) + np.bincount(dst, minlength=n)
+        key_s = deg[src] * (n + 1) + src
+        key_d = deg[dst] * (n + 1) + dst
+        swap = key_s > key_d
+        a = np.where(swap, dst, src)
+        b = np.where(swap, src, dst)
+    else:
+        raise ValueError(mode)
+    e = np.unique(np.stack([a, b], axis=1), axis=0)
+    return e[:, 0], e[:, 1]
+
+
+def csr_from_edges(src: np.ndarray, dst: np.ndarray,
+                   n_nodes: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+    """CSR (indptr, indices) with sorted rows — the TrieArray of E."""
+    if n_nodes is None:
+        n_nodes = int(max(src.max(initial=-1), dst.max(initial=-1))) + 1
+    order = np.lexsort((dst, src))
+    src, dst = src[order], dst[order]
+    counts = np.bincount(src, minlength=n_nodes)
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    return indptr, dst.astype(np.int32)
+
+
+def pad_neighbors(indptr: np.ndarray, indices: np.ndarray,
+                  k: Optional[int] = None) -> np.ndarray:
+    """(V, K) padded, sorted neighbor matrix with SENTINEL fill."""
+    n = len(indptr) - 1
+    deg = np.diff(indptr)
+    if k is None:
+        k = int(deg.max(initial=1))
+    k = max(int(k), 1)
+    out = np.full((n, k), SENTINEL, dtype=np.int32)
+    for_rows = np.repeat(np.arange(n), deg)
+    cols = np.arange(len(indices)) - np.repeat(indptr[:-1], deg)
+    ok = cols < k
+    out[for_rows[ok], cols[ok]] = indices[ok]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# jitted intersection primitives
+# ---------------------------------------------------------------------------
+
+def _row_intersect_count(a_row: jnp.ndarray, b_row: jnp.ndarray) -> jnp.ndarray:
+    """|a ∩ b| for two sorted sentinel-padded rows (binary-search probing)."""
+    pos = jnp.searchsorted(b_row, a_row)
+    pos = jnp.clip(pos, 0, b_row.shape[0] - 1)
+    hit = (b_row[pos] == a_row) & (a_row != SENTINEL)
+    return jnp.sum(hit.astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def _count_chunked(npad: jnp.ndarray, eu: jnp.ndarray, ev: jnp.ndarray,
+                   chunk: int = 2048) -> jnp.ndarray:
+    """Σ_edges |N(u) ∩ N(v)| with a scan over fixed-size edge chunks."""
+    m = eu.shape[0]
+    n_chunks = (m + chunk - 1) // chunk
+    pad = n_chunks * chunk - m
+    # pad with self-edges on node 0 against an empty sentinel row: count 0
+    eu_p = jnp.concatenate([eu, jnp.full((pad,), 0, eu.dtype)])
+    ev_p = jnp.concatenate([ev, jnp.full((pad,), 0, ev.dtype)])
+    valid = jnp.concatenate([jnp.ones((m,), jnp.int32), jnp.zeros((pad,), jnp.int32)])
+    eu_c = eu_p.reshape(n_chunks, chunk)
+    ev_c = ev_p.reshape(n_chunks, chunk)
+    va_c = valid.reshape(n_chunks, chunk)
+
+    def body(carry, inp):
+        u, v, ok = inp
+        a = npad[u]            # (chunk, K)
+        b = npad[v]
+        cnt = jax.vmap(_row_intersect_count)(a, b)
+        return carry + jnp.sum(cnt * ok), None
+
+    total, _ = jax.lax.scan(body, jnp.int64(0) if jax.config.jax_enable_x64
+                            else jnp.int32(0), (eu_c, ev_c, va_c))
+    return total
+
+
+def triangle_count_vectorized(src: np.ndarray, dst: np.ndarray,
+                              orientation: str = "minmax",
+                              chunk: int = 2048) -> int:
+    """End-to-end vectorized LFTJ-Δ triangle count of an undirected graph."""
+    a, b = orient_edges(src, dst, orientation)
+    indptr, indices = csr_from_edges(a, b)
+    npad = pad_neighbors(indptr, indices)
+    return int(_count_chunked(jnp.asarray(npad), jnp.asarray(a, jnp.int32),
+                              jnp.asarray(b, jnp.int32), chunk=chunk))
+
+
+# ---------------------------------------------------------------------------
+# dense (MXU) formulation
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def triangle_count_dense(adj: jnp.ndarray) -> jnp.ndarray:
+    """Σ A ⊙ (A Aᵀ) for a dense 0/1 DAG adjacency block.
+
+    On TPU this is a masked SYRK on the MXU: |E_box|·d work at 197 TFLOP/s,
+    profitable whenever box density is above the MXU/VPU crossover
+    (see kernels/triangle_dense for the Pallas tiling and §Perf for the
+    crossover measurement).
+    """
+    a = adj.astype(jnp.float32)
+    paths = a @ a.T
+    return jnp.sum(a * paths).astype(jnp.int64) if jax.config.jax_enable_x64 \
+        else jnp.sum(a * paths).astype(jnp.int32)
+
+
+def dense_adjacency(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
+    adj = np.zeros((n, n), dtype=np.float32)
+    adj[src, dst] = 1.0
+    return adj
+
+
+# ---------------------------------------------------------------------------
+# per-box vectorized execution (ties boxing to the TPU path)
+# ---------------------------------------------------------------------------
+
+def triangle_count_boxed_vectorized(src: np.ndarray, dst: np.ndarray,
+                                    mem_words: int,
+                                    orientation: str = "minmax",
+                                    dense_threshold: float = 0.05,
+                                    chunk: int = 2048) -> Tuple[int, dict]:
+    """Boxed execution with the vectorized/dense per-box engines.
+
+    The box plan comes from the paper's probe/provision machinery
+    (core.boxing.plan_boxes); each box is solved with the vectorized
+    intersection primitive, or the dense MXU formulation when the
+    box's edge density crosses ``dense_threshold``. Returns (count, info).
+    """
+    from .boxing import plan_boxes
+    from .triearray import TrieArray
+
+    a, b = orient_edges(src, dst, orientation)
+    ta = TrieArray.from_edges(a, b)
+    boxes = plan_boxes(ta, mem_words)
+    indptr, indices = csr_from_edges(a, b)
+    nv = len(indptr) - 1
+    npad = jnp.asarray(pad_neighbors(indptr, indices))
+    total = 0
+    n_dense = 0
+    for (lx, hx, ly, hy) in boxes:
+        lx_, hx_ = max(lx, 0), min(hx, nv - 1)
+        ly_, hy_ = max(ly, 0), min(hy, nv - 1)
+        if hx_ < lx_ or hy_ < ly_:
+            continue
+        # in-box edges (x,y): src in [lx,hx] (the E(x,·) slice), y in [ly,hy]
+        s0, s1 = indptr[lx_], indptr[hx_ + 1]
+        eu = np.repeat(np.arange(lx_, hx_ + 1),
+                       np.diff(indptr[lx_:hx_ + 2]))
+        ev = indices[s0:s1].astype(np.int64)
+        sel = (ev >= ly_) & (ev <= hy_)
+        eu, ev = eu[sel], ev[sel]
+        if len(eu) == 0:
+            continue
+        wx, wy = hx_ - lx_ + 1, hy_ - ly_ + 1
+        density = len(eu) / max(1, wx * wy)
+        # dense path: z spans the full node range (dim z is unbounded in the
+        # box), so rows carry ALL columns: count = Σ mask ⊙ (Ax Ayᵀ).
+        if density > dense_threshold and (wx + wy) * nv <= 64_000_000:
+            ax = np.zeros((wx, nv), dtype=np.float32)
+            ay = np.zeros((wy, nv), dtype=np.float32)
+            ru = np.repeat(np.arange(lx_, hx_ + 1), np.diff(indptr[lx_:hx_ + 2]))
+            ax[ru - lx_, indices[s0:s1]] = 1.0
+            t0, t1 = indptr[ly_], indptr[hy_ + 1]
+            rv = np.repeat(np.arange(ly_, hy_ + 1), np.diff(indptr[ly_:hy_ + 2]))
+            ay[rv - ly_, indices[t0:t1]] = 1.0
+            mask = np.zeros((wx, wy), dtype=np.float32)
+            mask[eu - lx_, ev - ly_] = 1.0
+            total += int((mask * (ax @ ay.T)).sum())
+            n_dense += 1
+        else:
+            total += int(_count_chunked(npad,
+                                        jnp.asarray(eu, jnp.int32),
+                                        jnp.asarray(ev, jnp.int32),
+                                        chunk=chunk))
+    return total, {"n_boxes": len(boxes), "n_dense_boxes": n_dense}

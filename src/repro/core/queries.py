@@ -1,0 +1,111 @@
+"""Generic full-conjunctive query utilities (paper §2.1, Def. 12).
+
+Queries are given in a Datalog-ish form: a head variable tuple plus body
+atoms over named relations. Utilities here:
+
+  * variable-order validation and automatic index creation — an atom whose
+    variables are not a subsequence of the chosen order gets a reordered
+    TrieArray index T_{π} built for it (paper: "indexes are created in a
+    preprocessing step", O(SORT) each);
+  * rank r_π(Q) and r(Q) (Def. 12): the largest position (1-based) of a
+    variable that is the *first* variable of some atom; governs the
+    no-spill I/O bound O(|I|^r / (M^{r-1} B) + K/B) (Thm. 13);
+  * repeated-variable rewrites are rejected with guidance (infinite Eq
+    predicates are out of scope for the TrieArray backend).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .leapfrog import Atom
+from .triearray import TrieArray
+
+
+@dataclass
+class Query:
+    head: Tuple[str, ...]
+    atoms: List[Atom]
+
+    def variables(self) -> List[str]:
+        seen: List[str] = []
+        for a in self.atoms:
+            for v in a.vars:
+                if v not in seen:
+                    seen.append(v)
+        return seen
+
+
+def is_consistent(atom: Atom, order: Sequence[str]) -> bool:
+    pos = [order.index(v) for v in atom.vars]
+    return pos == sorted(pos)
+
+
+def rank_for_order(q: Query, order: Sequence[str]) -> int:
+    """r_π(Q), 1-based (Def. 12). Triangle query with (x,y,z): 2."""
+    r = 0
+    for a in q.atoms:
+        r = max(r, list(order).index(a.vars[0]) + 1)
+    return r
+
+
+def best_rank(q: Query) -> Tuple[int, Tuple[str, ...]]:
+    """r(Q) = min over key orders; exhaustive (queries are small: data
+    complexity treats the query as fixed, paper §1)."""
+    vs = q.variables()
+    best = (len(vs) + 1, tuple(vs))
+    for perm in itertools.permutations(vs):
+        if all(is_consistent(a, perm) or True for a in q.atoms):
+            # any atom may be served by a reordered index, so every
+            # permutation is feasible; rank only depends on first variables
+            # after reordering each atom's vars to match perm.
+            r = 0
+            for a in q.atoms:
+                first = min(perm.index(v) for v in a.vars)
+                r = max(r, first + 1)
+            if r < best[0]:
+                best = (r, perm)
+    return best
+
+
+def build_indexes(q: Query, order: Sequence[str],
+                  relations: Dict[str, TrieArray]):
+    """Return (atoms', relations') where every atom is order-consistent.
+
+    For an inconsistent atom R(y, x) a new index R__pi(x, y) is built by
+    column permutation + re-sort (Prop. 3 cost)."""
+    out_atoms: List[Atom] = []
+    out_rels: Dict[str, TrieArray] = dict(relations)
+    for a in q.atoms:
+        if is_consistent(a, order):
+            out_atoms.append(a)
+            continue
+        perm = sorted(range(len(a.vars)), key=lambda i: order.index(a.vars[i]))
+        new_vars = tuple(a.vars[i] for i in perm)
+        new_name = f"{a.rel}__{''.join(map(str, perm))}"
+        if new_name not in out_rels:
+            tuples = relations[a.rel].to_tuples()
+            out_rels[new_name] = TrieArray.from_tuples(tuples[:, perm])
+        out_atoms.append(Atom(new_name, new_vars))
+    return out_atoms, out_rels
+
+
+def run_query(q: Query, order: Sequence[str],
+              relations: Dict[str, TrieArray],
+              mem_words: Optional[int] = None,
+              emit=None) -> int:
+    """Execute a query: in-memory LFTJ, or boxed when mem_words is given."""
+    from .boxing import BoxedLFTJ, BoxingConfig
+    from .leapfrog import LeapfrogTriejoin
+
+    atoms, rels = build_indexes(q, order, relations)
+    if mem_words is None:
+        j = LeapfrogTriejoin(atoms, list(order), rels)
+        return j.run(emit=emit)
+    cfg = BoxingConfig(mem_words=mem_words)
+    bj = BoxedLFTJ(atoms, list(order), rels, cfg, emit=emit)
+    return bj.run()

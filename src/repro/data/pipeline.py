@@ -1,0 +1,44 @@
+"""Double-buffered host prefetcher: overlaps host batch prep with device
+compute (the standard input-pipeline pattern on TPU hosts)."""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+
+class Prefetcher:
+    """Runs ``producer()`` on a background thread, ``depth`` batches ahead.
+
+    Iteration order is preserved; exceptions propagate to the consumer.
+    """
+
+    _SENTINEL = object()
+
+    def __init__(self, producer: Iterator, depth: int = 2):
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.err: Optional[BaseException] = None
+
+        def run():
+            try:
+                for item in producer:
+                    self.q.put(item)
+            except BaseException as e:  # noqa: BLE001
+                self.err = e
+            finally:
+                self.q.put(self._SENTINEL)
+
+        self.thread = threading.Thread(target=run, daemon=True)
+        self.thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is self._SENTINEL:
+            if self.err is not None:
+                raise self.err
+            raise StopIteration
+        return item

@@ -1,0 +1,122 @@
+"""Pallas TPU kernels: EmbeddingBag (ragged gather + bag-sum).
+
+Two TPU-native formulations (DESIGN.md §2 / kernel_taxonomy B.6):
+
+1. ``embedding_bag_pallas_dma`` — the table stays in HBM (ANY memory
+   space); bag indices are scalar-prefetched into SMEM; the kernel issues
+   per-row async DMAs HBM→VMEM and accumulates bag sums in VMEM. This is
+   the sparse-access-dominant regime (V·D ≫ VMEM): exactly the paper's
+   *slice provisioning* pattern — only the touched rows move, charged at
+   row granularity (cf. TrieArray slices, Prop. 7).
+
+2. ``embedding_bag_pallas_onehot`` — MXU formulation for the per-device
+   sub-table after vocab sharding (V_shard·D ≤ VMEM budget): bag-block ×
+   vocab-block one-hot matmul, grid-accumulated. Dense flops for sparse
+   work, but at 197 TFLOP/s the crossover sits near V_shard ≈ 64k for
+   L = 64 (napkin math in EXPERIMENTS.md §Perf).
+
+Both validated against ref.py in interpret mode; ops.py picks by shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# 1. HBM row-DMA formulation
+# ---------------------------------------------------------------------------
+
+def _bag_dma_kernel(idx_ref, table_ref, out_ref, row_buf, sem, *, bb, ll, v):
+    i = pl.program_id(0)
+
+    def bag_body(bi, _):
+        def slot_body(si, acc):
+            ix = idx_ref[i * bb + bi, si]
+            safe = jnp.minimum(ix, v - 1)
+            cp = pltpu.make_async_copy(table_ref.at[safe], row_buf, sem)
+            cp.start()
+            cp.wait()
+            take = (ix < v).astype(table_ref.dtype)
+            return acc + take * row_buf[...]
+
+        acc0 = jnp.zeros(out_ref.shape[1:], out_ref.dtype)
+        out_ref[bi, :] = jax.lax.fori_loop(0, ll, slot_body, acc0)
+        return 0
+
+    jax.lax.fori_loop(0, bb, bag_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "interpret"))
+def embedding_bag_pallas_dma(table: jnp.ndarray, idx: jnp.ndarray,
+                             bb: int = 8, interpret: bool = False) -> jnp.ndarray:
+    """table (V, D) in HBM; idx (B, L) int32 with PAD == V. B % bb == 0."""
+    v, d = table.shape
+    b, ll = idx.shape
+    assert b % bb == 0, (b, bb)
+    grid = (b // bb,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],      # table stays in HBM
+        out_specs=pl.BlockSpec((bb, d), lambda i, *_: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((d,), table.dtype),
+                        pltpu.SemaphoreType.DMA],
+    )
+    return pl.pallas_call(
+        functools.partial(_bag_dma_kernel, bb=bb, ll=ll, v=v),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(idx, table)
+
+
+# ---------------------------------------------------------------------------
+# 2. one-hot MXU formulation
+# ---------------------------------------------------------------------------
+
+def _bag_onehot_kernel(idx_ref, table_ref, out_ref, *, nsteps_v, bv):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[...]                                   # (bb, L) int32
+    tab = table_ref[...]                                 # (bv, D)
+    base = j * bv
+    # one-hot of the local vocab window: (bb, L, bv) contracted on (L, bv)
+    local = idx - base
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, bv), 2)
+    onehot = (local[..., None] == iota).astype(tab.dtype)  # (bb, L, bv)
+    bag_hist = jnp.sum(onehot, axis=1)                   # (bb, bv) multi-hot counts
+    out_ref[...] += jax.lax.dot_general(
+        bag_hist, tab, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bv", "interpret"))
+def embedding_bag_pallas_onehot(table: jnp.ndarray, idx: jnp.ndarray,
+                                bb: int = 128, bv: int = 512,
+                                interpret: bool = False) -> jnp.ndarray:
+    """table (V, D) with V % bv == 0; idx (B, L) with PAD >= V; B % bb == 0."""
+    v, d = table.shape
+    b, ll = idx.shape
+    assert b % bb == 0 and v % bv == 0, (b, v, bb, bv)
+    grid = (b // bb, v // bv)
+    return pl.pallas_call(
+        functools.partial(_bag_onehot_kernel, nsteps_v=grid[1], bv=bv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, ll), lambda i, j: (i, 0)),
+            pl.BlockSpec((bv, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(idx, table)

@@ -1,0 +1,46 @@
+"""jit'd public wrapper for the EmbeddingBag kernels (pad + dispatch)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import embedding_bag_pallas_dma, embedding_bag_pallas_onehot
+from .ref import embedding_bag_ref
+
+
+def embedding_bag(table, idx, *, use_pallas: bool = True,
+                  mode: str = "auto", interpret: bool | None = None):
+    """Bag-sum embedding lookup. idx uses PAD == table.shape[0].
+
+    mode: 'dma' (HBM row gather), 'onehot' (MXU), 'auto' (by table size)."""
+    table = jnp.asarray(table)
+    idx = jnp.asarray(idx, jnp.int32)
+    v, d = table.shape
+    b, ll = idx.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if not use_pallas:
+        return embedding_bag_ref(table, idx)
+    if mode == "auto":
+        mode = "onehot" if v * d * table.dtype.itemsize <= (1 << 22) else "dma"
+    if mode == "onehot":
+        bv = 512 if v >= 512 else int(np.ceil(v / 8)) * 8
+        vp = int(np.ceil(v / bv)) * bv
+        bb = min(128, b) if b % min(128, b) == 0 else 1
+        bp = int(np.ceil(b / bb)) * bb
+        tab = jnp.pad(table, ((0, vp - v), (0, 0)))
+        # PAD indices (== v) must fall outside every vocab window: send to vp
+        ix = jnp.where(idx >= v, vp + 1, idx)
+        ix = jnp.pad(ix, ((0, bp - b), (0, 0)), constant_values=vp + 1)
+        out = embedding_bag_pallas_onehot(tab, ix, bb=bb, bv=bv,
+                                          interpret=interpret)
+        return out[:b]
+    if mode == "dma":
+        bb = 8 if b % 8 == 0 else 1
+        bp = int(np.ceil(b / bb)) * bb
+        ix = jnp.pad(idx, ((0, bp - b), (0, 0)), constant_values=v)
+        out = embedding_bag_pallas_dma(table, ix, bb=bb, interpret=interpret)
+        return out[:b]
+    raise ValueError(mode)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the embedding-bag kernel (gather + segment-sum).
+
+JAX has no native EmbeddingBag (kernel_taxonomy §B.6): the reference is
+``jnp.take`` over the table followed by a masked sum over the bag axis.
+
+Inputs:
+  table   (V, D)      embedding table
+  idx     (B, L)      per-bag indices, PAD (= V) marks empty slots
+  weights (B, L) opt  per-sample weights
+Output:
+  (B, D) bag sums.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, idx: jnp.ndarray,
+                      weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    v = table.shape[0]
+    safe = jnp.minimum(idx, v - 1)
+    gathered = jnp.take(table, safe, axis=0)            # (B, L, D)
+    mask = (idx < v).astype(table.dtype)[..., None]
+    if weights is not None:
+        mask = mask * weights[..., None].astype(table.dtype)
+    return jnp.sum(gathered * mask, axis=1)

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: batched leapfrog join (sorted-set intersection counts).
+
+Per grid cell, a (bE, K) tile of x-side neighbor rows and the matching
+(bE, K) tile of y-side rows sit in VMEM; the kernel emits per-row |a ∩ b|.
+
+Hardware adaptation (DESIGN.md §2): the paper's leapfrog join advances
+iterators with binary searches — a *gather* access pattern the TPU VPU has
+no efficient cross-lane primitive for. We instead compare a against all K
+rotations of b (`jnp.roll` by a constant 1 per step), which lowers to cheap
+lane shuffles: K steps × (bE, K) lane-parallel compares = O(K²) flops/row,
+but at full 8×128 VPU width with zero data-dependent control flow. For the
+K ≤ 512 regime the boxing planner produces (degree-capped slices), the
+rotation form wins over an in-VMEM binary search by avoiding serialization;
+rows are *sets* (strictly sorted), so each (j,k) pair matches at most once
+across rotations and the count is exact. SENTINEL padding never matches
+because hits are gated on a != SENTINEL.
+
+VMEM per cell @ (bE,K)=(256,512): 3 × 256·512·4 B = 1.5 MiB « 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+SENTINEL = np.iinfo(np.int32).max
+
+
+def _intersect_kernel(a_ref, b_ref, out_ref):
+    a = a_ref[...]                                  # (bE, K) int32 sorted rows
+    b = b_ref[...]
+    k = a.shape[1]
+    valid = (a != SENTINEL)
+
+    def step(i, carry):
+        acc, b_rot = carry
+        acc = acc + jnp.where((a == b_rot) & valid, 1, 0)
+        b_rot = jnp.roll(b_rot, 1, axis=1)          # constant-shift lane rotate
+        return acc, b_rot
+
+    acc0 = jnp.zeros(a.shape, jnp.int32)
+    acc, _ = jax.lax.fori_loop(0, k, step, (acc0, b))
+    out_ref[...] = jnp.sum(acc, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("be", "interpret"))
+def intersect_count_pallas(a: jnp.ndarray, b: jnp.ndarray,
+                           be: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """a, b: (E, K) int32 sorted SENTINEL-padded rows; returns (E,) int32.
+
+    E must be a multiple of ``be`` and K a multiple of 128 (ops.py pads)."""
+    e, k = a.shape
+    assert e % be == 0 and k % 128 == 0, (e, k, be)
+    grid = (e // be,)
+    out = pl.pallas_call(
+        _intersect_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((be, k), lambda i: (i, 0)),
+            pl.BlockSpec((be, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((be, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, 1), jnp.int32),
+        interpret=interpret,
+    )(a, b)
+    return out[:, 0]

@@ -1,0 +1,33 @@
+"""jit'd public wrapper for the leapfrog-intersection kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import SENTINEL, intersect_count_pallas
+from .ref import intersect_count_ref
+
+
+def intersect_count(a, b, *, be: int = 256, use_pallas: bool = True,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Per-row sorted-set intersection counts |a_i ∩ b_i|.
+
+    Pads rows with SENTINEL to a lane multiple and the row count to ``be``;
+    padded rows return 0 and are stripped."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    e, ka = a.shape
+    kb = b.shape[1]
+    k = int(np.ceil(max(ka, kb, 1) / 128)) * 128
+    ep = int(np.ceil(max(e, 1) / be)) * be
+    a = jnp.pad(a, ((0, ep - e), (0, k - ka)), constant_values=SENTINEL)
+    b = jnp.pad(b, ((0, ep - e), (0, k - kb)), constant_values=SENTINEL)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if not use_pallas:
+        out = intersect_count_ref(a, b)
+    else:
+        out = intersect_count_pallas(a, b, be=be, interpret=interpret)
+    return out[:e]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the dense triangle-count kernel.
+
+count = Σ_{x,y} A[x,y] · (A Aᵀ)[x,y]  over a 0/1 DAG adjacency
+      = number of (x,y,z) with (x,y),(x,z),(y,z) ∈ E  (paper query Δ),
+
+optionally restricted by an edge mask M (the box's x/y window):
+count = Σ M ⊙ (A Bᵀ) where A = rows of the x-slice, B = rows of the y-slice.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def triangle_count_ref(a: jnp.ndarray, b: jnp.ndarray,
+                       mask: jnp.ndarray) -> jnp.ndarray:
+    """a: (nx, d) 0/1 rows for x-range; b: (ny, d) rows for y-range;
+    mask: (nx, ny) in-box edge indicator. fp32 accumulate, int64-safe sum."""
+    paths = a.astype(jnp.float32) @ b.astype(jnp.float32).T
+    return jnp.sum(mask.astype(jnp.float32) * paths).astype(jnp.float32)

@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces (and stores under results/dryrun/):
+  * compile success (the deliverable gate),
+  * memory_analysis()  — per-device argument/output/temp/peak bytes,
+  * cost_analysis()    — HLO flops & bytes (per partitioned device program),
+  * collective bytes   — parsed from the compiled HLO: Σ operand bytes of
+    all-reduce / all-gather / reduce-scatter / all-to-all /
+    collective-permute (async -start forms counted once),
+  * the three roofline terms vs TPU v5e constants (launch.mesh.HW).
+
+Usage:
+  python -m repro.launch.dryrun --all                 # 40 cells × 2 meshes
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all --mesh single --force
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+          "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1,
+          "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s+(\(?[a-z0-9_,\[\]{} ]*\)?)\s+(all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Per-opcode result-shape bytes of every collective in the compiled
+    (per-device SPMD) HLO. Result bytes ≈ bytes moved per device for
+    all-gather/all-to-all/collective-permute, and ≈ half the ring traffic
+    for all-reduce; reduce-scatter results under-count by the group size —
+    the accounting convention is recorded in EXPERIMENTS.md §Roofline.
+    Async ``-start`` forms print a (operand, result) tuple: the largest
+    shape is taken; ``-done`` lines carry no opcode match and are skipped.
+    Scan bodies appear once; launch.dryrun extrapolates by trip count."""
+    out = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1 + 1)
+        shapes = _SHAPE_RE.findall(m.group(1))
+        if not shapes:
+            continue
+        total = max(_shape_bytes(d, s) for d, s in shapes)
+        rec = out.setdefault(op, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += total
+    return out
+
+
+def model_flops_for(cell) -> float:
+    """MODEL_FLOPS: 6·N·D for LM (N = active params), analytic for others."""
+    cfg = cell.cfg
+    if cell.step_kind in ("train",) and hasattr(cfg, "active_params_count"):
+        n = cfg.active_params_count()
+        toks = cell.meta.get("tokens", 0)
+        return 6.0 * n * toks
+    if cell.step_kind == "prefill" and hasattr(cfg, "active_params_count"):
+        return 2.0 * cfg.active_params_count() * cell.meta.get("tokens", 0)
+    if cell.step_kind == "decode" and hasattr(cfg, "active_params_count"):
+        return 2.0 * cfg.active_params_count() * cell.meta.get("tokens", 0)
+    if hasattr(cfg, "kind"):  # GNN: ~6 · E · d_hidden² per MP layer (train)
+        e = cell.meta.get("n_edges", 0)
+        nn = cell.meta.get("n_nodes", 0)
+        mults = {"gcn": 1, "gin": 2, "schnet": 4, "graphcast": 6}
+        per = mults.get(cfg.kind, 2) * cfg.d_hidden * cfg.d_hidden
+        fwd = (e + nn) * per * cfg.n_layers * 2
+        return 3.0 * fwd  # fwd + bwd ~ 3x
+    if hasattr(cfg, "table_sizes"):  # DLRM: MLP flops dominate
+        b = cell.meta.get("batch", cell.meta.get("candidates", 0))
+        dims = [cfg.n_dense] + list(cfg.bot_mlp)
+        f = sum(dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+        n_int = cfg.n_sparse + 1
+        d_top = cfg.embed_dim + n_int * (n_int - 1) // 2
+        dims = [d_top] + list(cfg.top_mlp)
+        f += sum(dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+        f += n_int * n_int * cfg.embed_dim  # interaction
+        mult = 6.0 if cell.step_kind == "train" else 2.0
+        return mult * b * f
+    return 0.0
+
+
+def _scan_repeats(cfg) -> int:
+    """Trip count of the layer scan (1 => no extrapolation needed)."""
+    if hasattr(cfg, "n_repeats"):
+        return int(cfg.n_repeats)
+    if getattr(cfg, "kind", None) == "graphcast":
+        return int(cfg.n_layers)
+    return 1
+
+
+def _repeats_transform(cfg, k: int):
+    """Probe config: k scan repeats, scan fully unrolled so XLA cost
+    analysis sees every layer (while bodies are otherwise counted once —
+    the k=1/k=2 delta of *unrolled* probes is the exact per-layer cost)."""
+    import dataclasses
+    if hasattr(cfg, "n_repeats"):
+        return dataclasses.replace(
+            cfg, n_layers=len(cfg.prefix) + len(cfg.pattern) * k,
+            scan_unroll=True)
+    if getattr(cfg, "kind", None) == "graphcast":
+        return dataclasses.replace(cfg, n_layers=k, scan_unroll=True)
+    return cfg
+
+
+def _measure(cell) -> tuple:
+    """(flops, bytes, collectives-dict) of a compiled cell, per device."""
+    lowered = cell.lower()
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             out_dir: Path, smoke: bool = False, force: bool = False,
+             probes: bool = True, cfg_transform=None, variant: str = "") -> dict:
+    import jax
+    from repro.configs import get_arch
+    from repro.launch.mesh import HW, make_production_mesh
+    from repro.launch.steps import build_cell
+
+    tag = f"{arch_id}__{shape_name}__{mesh_kind}" + ("__smoke" if smoke else "")
+    if variant:
+        tag += f"__{variant}"
+    out_path = out_dir / f"{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+           "ok": False}
+    if variant:
+        rec["variant"] = variant
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        n_chips = mesh.devices.size
+        cell = build_cell(arch_id, shape_name, mesh, smoke=smoke,
+                          cfg_transform=cfg_transform)
+        with mesh:
+            lowered = cell.lower()
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
+            hlo = compiled.as_text()
+            coll = collective_bytes_from_hlo(hlo)
+
+        rec.update(ok=True, lower_s=round(t1 - t0, 2),
+                   compile_s=round(t2 - t1, 2), n_chips=int(n_chips))
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                rec[k] = int(v)
+        rec["peak_bytes_per_device"] = int(
+            getattr(mem, "temp_size_in_bytes", 0) or 0) + int(
+            getattr(mem, "argument_size_in_bytes", 0) or 0)
+        flops_dev = float(cost.get("flops", 0.0)) if cost else 0.0
+        bytes_dev = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+        rec["hlo_flops_per_device_raw"] = flops_dev
+        rec["hlo_bytes_per_device_raw"] = bytes_dev
+        rec["collectives"] = coll
+
+        # XLA cost analysis counts `while` (scan) bodies ONCE regardless of
+        # trip count. Two probe compiles at n_repeats = 1 and 2 give the
+        # per-layer deltas; linear extrapolation recovers the full program
+        # (exact for homogeneous scanned layers; see EXPERIMENTS.md).
+        r = _scan_repeats(cell.cfg)
+        rec["scan_repeats"] = r
+        if probes and r > 2:
+            # probes at k=2 and k=3 (k=1 lets XLA squeeze the layer axis
+            # and change partitioning decisions): body = m3 - m2,
+            # total(R) = m2 + (R-2)·body — exact for homogeneous layers.
+            def _probe_tf(k):
+                def tf(c):
+                    if cfg_transform is not None:
+                        c = cfg_transform(c)
+                    return _repeats_transform(c, k)
+                return tf
+
+            cell2 = build_cell(arch_id, shape_name, mesh, smoke=smoke,
+                               cfg_transform=_probe_tf(2))
+            cell3 = build_cell(arch_id, shape_name, mesh, smoke=smoke,
+                               cfg_transform=_probe_tf(3))
+            with mesh:
+                f2, b2, c2 = _measure(cell2)
+                f3, b3, c3 = _measure(cell3)
+            flops_dev = max(f2 + (r - 2) * (f3 - f2), flops_dev)
+            bytes_dev = max(b2 + (r - 2) * (b3 - b2), bytes_dev)
+            coll_x = {}
+            ops = set(c2) | set(c3) | set(coll)
+            for op in ops:
+                v2 = c2.get(op, {"count": 0, "bytes": 0})
+                v3 = c3.get(op, {"count": 0, "bytes": 0})
+                coll_x[op] = {
+                    "count": max(0, v2["count"] + (r - 2) * (v3["count"] - v2["count"])),
+                    "bytes": max(0, v2["bytes"] + (r - 2) * (v3["bytes"] - v2["bytes"])),
+                }
+            coll = coll_x
+            rec["probe_flops"] = [f2, f3]
+            rec["collectives_extrapolated"] = coll
+        rec["hlo_flops_per_device"] = flops_dev
+        rec["hlo_bytes_per_device"] = bytes_dev
+        coll_bytes = sum(v["bytes"] for v in coll.values())
+        rec["collective_bytes_per_device"] = coll_bytes
+        rec["model_flops_global"] = model_flops_for(cell)
+
+        # roofline terms (seconds): per-device work vs per-chip peaks —
+        # chips factor already absorbed because the partitioned HLO is the
+        # per-device program (EXPERIMENTS.md §Roofline, 'accounting').
+        rec["t_compute_s"] = flops_dev / HW["peak_bf16_flops"]
+        rec["t_memory_s"] = bytes_dev / HW["hbm_bandwidth"]
+        rec["t_collective_s"] = coll_bytes / HW["ici_bandwidth"]
+        terms = {"compute": rec["t_compute_s"], "memory": rec["t_memory_s"],
+                 "collective": rec["t_collective_s"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+        total_hlo_flops = flops_dev * n_chips
+        rec["useful_flops_ratio"] = (rec["model_flops_global"] /
+                                     total_hlo_flops) if total_hlo_flops else 0.0
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = round(time.time() - t0, 2)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2))
+    status = "OK" if rec["ok"] else "FAIL"
+    print(f"[{status}] {tag} wall={rec['wall_s']}s "
+          f"{'err=' + rec.get('error', '') if not rec['ok'] else ''}",
+          flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import all_arch_ids, get_arch
+
+    out_dir = Path(args.out)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for aid in all_arch_ids():
+            for shp in get_arch(aid).shape_names():
+                cells.append((aid, shp))
+    else:
+        aid = args.arch
+        shapes = [args.shape] if args.shape else get_arch(aid).shape_names()
+        cells = [(aid, s) for s in shapes]
+
+    n_ok = n_fail = 0
+    for aid, shp in cells:
+        for mk in meshes:
+            # roofline probes (2 extra compiles) only for the single-pod
+            # mesh — §Roofline is single-pod; multi-pod proves sharding.
+            rec = run_cell(aid, shp, mk, out_dir, smoke=args.smoke,
+                           force=args.force, probes=(mk == "single"))
+            n_ok += rec["ok"]
+            n_fail += not rec["ok"]
+    print(f"dry-run complete: {n_ok} ok, {n_fail} failed", flush=True)
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,33 @@
+"""Production mesh construction (assignment MULTI-POD DRY-RUN §1).
+
+A function, not a module-level constant: importing this module never
+touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) 'data' x 'model' single pod (256 chips), or
+    (2, 16, 16) 'pod' x 'data' x 'model' for 2 pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh over the real local device (smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e-class hardware constants used by the roofline analysis.
+HW = dict(
+    peak_bf16_flops=197e12,      # per chip
+    hbm_bandwidth=819e9,         # bytes/s per chip
+    ici_bandwidth=50e9,          # bytes/s per link
+    hbm_bytes=16 * 2**30,        # capacity per chip
+    chips_single_pod=256,
+    chips_multi_pod=512,
+)

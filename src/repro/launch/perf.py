@@ -1,0 +1,97 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: measure named variants of the three chosen
+cells and append the hypothesis → change → before/after log.
+
+  PYTHONPATH=src python -m repro.launch.perf [--cell qwen2_prefill] [--force]
+
+Variants are (name, cfg_transform) pairs; every measurement goes through
+the same dry-run pipeline (compile + memory/cost/collective analysis +
+scan-probe extrapolation) into results/perf/.
+"""
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+OUT = Path("results/perf")
+
+
+def qwen2_prefill_variants():
+    return [
+        ("v1_qchunk1024", lambda c: dataclasses.replace(c, attn_q_chunk=1024)),
+        ("v2_qchunk2048", lambda c: dataclasses.replace(c, attn_q_chunk=2048)),
+        ("v3_qchunk512", lambda c: dataclasses.replace(c, attn_q_chunk=512)),
+    ]
+
+
+def deepseek_train_variants():
+    return [
+        ("v1_sortdispatch",
+         lambda c: dataclasses.replace(c, moe_impl="gathered_sort")),
+        ("v2_sort_qchunk",
+         lambda c: dataclasses.replace(c, moe_impl="gathered_sort",
+                                       attn_q_chunk=1024)),
+        # v3 = v1 + device-local dispatch scatters (moe_x_local rule;
+        # code change in moe_ffn_sorted)
+        ("v3_sort_localdisp",
+         lambda c: dataclasses.replace(c, moe_impl="gathered_sort")),
+    ]
+
+
+def dlrm_train_variants():
+    return [
+        ("v1_sparse_opt",
+         lambda c: dataclasses.replace(c, sparse_optimizer=True)),
+        # v2 = v1 + replicated row-update constraint (code change in
+        # dlrm.make_sparse_train_step guarded by the dlrm_rows rule)
+        ("v2_sparse_opt_repl",
+         lambda c: dataclasses.replace(c, sparse_optimizer=True)),
+        ("v3_sparse_zero_moments",
+         lambda c: dataclasses.replace(c, sparse_optimizer=True,
+                                       shard_moments_2d=True)),
+    ]
+
+
+CELLS = {
+    "qwen2_prefill": ("qwen2-7b", "prefill_32k", qwen2_prefill_variants),
+    "deepseek_train": ("deepseek-v2-236b", "train_4k", deepseek_train_variants),
+    "dlrm_train": ("dlrm-mlperf", "train_batch", dlrm_train_variants),
+}
+
+
+def summarize(rec):
+    if not rec.get("ok"):
+        return f"FAIL {rec.get('error', '')[:120]}"
+    gb = (rec.get("temp_size_in_bytes", 0) +
+          rec.get("argument_size_in_bytes", 0)) / 2**30
+    return (f"comp={rec['t_compute_s']:.3f}s mem={rec['t_memory_s']:.3f}s "
+            f"coll={rec['t_collective_s']:.3f}s [{rec['bottleneck']}] "
+            f"useful={rec.get('useful_flops_ratio', 0):.3f} "
+            f"peak={gb:.1f}GiB/dev")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(CELLS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    for key in ([args.cell] if args.cell else list(CELLS)):
+        arch, shape, variants = CELLS[key]
+        base = run_cell(arch, shape, "single", OUT, force=args.force,
+                        probes=True, variant="baseline")
+        print(f"{key}/baseline: {summarize(base)}", flush=True)
+        for vname, tf in variants():
+            rec = run_cell(arch, shape, "single", OUT, force=args.force,
+                           probes=True, cfg_transform=tf, variant=vname)
+            print(f"{key}/{vname}: {summarize(rec)}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

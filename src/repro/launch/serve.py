@@ -1,0 +1,77 @@
+"""Serving driver: batched prefill + decode with a KV cache.
+
+Chunked (Sarathi-style) prefill for long prompts, continuous batched
+decode, greedy sampling. CPU smoke configs execute end-to-end; full
+configs run via the same code path on TPU.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def generate(cfg, params, prompts: np.ndarray, n_gen: int,
+             greedy: bool = True, seed: int = 0):
+    """prompts (B, S) -> generated tokens (B, n_gen)."""
+    from repro.models import transformer as M
+    b, s = prompts.shape
+    max_len = s + n_gen
+    cache, logits = M.prefill(cfg, params, jnp.asarray(prompts),
+                              max_len=max_len)
+    decode = jax.jit(lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+    key = jax.random.PRNGKey(seed)
+    out = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    for i in range(n_gen):
+        out.append(np.asarray(tok)[:, 0])
+        logits, cache = decode(params, cache, tok, jnp.int32(s + i))
+        if greedy:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits)[:, None].astype(jnp.int32)
+    return np.stack(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_arch
+    from repro.models import layers as L
+
+    if args.smoke or jax.default_backend() == "cpu":
+        L.set_dtypes(jnp.float32, jnp.float32)
+    bundle = get_arch(args.arch)
+    assert bundle.family == "lm", "serve.py drives LM archs"
+    cfg = bundle.smoke_config if args.smoke else bundle.config
+
+    from repro.models import transformer as M
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
+
+    t0 = time.time()
+    toks = generate(cfg, params, prompts, args.gen)
+    dt = time.time() - t0
+    rate = args.batch * args.gen / dt
+    print(f"generated {toks.shape} in {dt:.2f}s ({rate:.1f} tok/s) "
+          f"sample row: {toks[0][:16].tolist()}")
+    return toks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,275 @@
+"""Step builders: one jit-able function per (arch × shape × mesh) cell.
+
+``build_cell`` returns everything launch/dryrun.py and launch/train.py
+need: the python callable, its abstract argument specs, and matching
+in/out shardings — so a cell is lowered with
+
+    jax.jit(fn, in_shardings=..., out_shardings=..., donate_argnums=...)
+       .lower(*arg_specs).compile()
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import config_for_shape, get_arch, input_specs
+from repro.models import dlrm as DLRM
+from repro.models import gnn as GNN
+from repro.models import transformer as TF
+from repro.optim import adamw
+from repro.parallel import sharding as SH
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    step_kind: str
+    fn: Callable
+    arg_specs: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    cfg: Any
+    meta: Dict[str, Any]
+
+    def jit(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jit().lower(*self.arg_specs)
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _batched(mesh, dim0: int, ndim: int, tail_axis=None, tail_dim=None):
+    """P(dp, ..., tail_axis at tail_dim) with divisibility fallbacks."""
+    dp = SH.dp_axes(mesh)
+    spec = [None] * ndim
+    if dim0 % int(jnp.prod(jnp.asarray([mesh.shape[a] for a in dp]))) == 0:
+        spec[0] = dp
+    if tail_axis is not None and tail_dim is not None:
+        spec[tail_dim] = tail_axis
+    return NamedSharding(mesh, P(*spec))
+
+
+OPT_CFG = adamw.AdamWConfig()
+
+
+def _with_rules(fn, mesh, family):
+    """Activate the family's activation-sharding rules at trace time."""
+    def wrapped(*args):
+        SH.set_rules(mesh, family)
+        try:
+            return fn(*args)
+        finally:
+            SH.set_rules(None, None)
+    return wrapped
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh,
+               smoke: bool = False, cfg_transform: Optional[Callable] = None
+               ) -> Cell:
+    bundle = get_arch(arch_id)
+    cfg = config_for_shape(arch_id, shape_name, smoke=smoke)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    step_kind, in_specs = input_specs(arch_id, shape_name, smoke=smoke,
+                                      cfg=cfg)
+    fam = bundle.family
+
+    if fam == "lm":
+        cell = _build_lm(arch_id, shape_name, step_kind, cfg, in_specs, mesh)
+    elif fam == "gnn":
+        cell = _build_gnn(arch_id, shape_name, step_kind, cfg, in_specs, mesh)
+    elif fam == "recsys":
+        cell = _build_dlrm(arch_id, shape_name, step_kind, cfg, in_specs, mesh)
+    else:
+        raise ValueError(fam)
+    cell.fn = _with_rules(cell.fn, mesh, fam)
+    return cell
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _build_lm(arch_id, shape_name, step_kind, cfg, in_specs, mesh) -> Cell:
+    shapes_tree = TF.param_shapes(cfg)
+    p_specs = TF.param_specs(cfg)
+    p_shard = SH.lm_param_sharding(mesh, shapes_tree)
+
+    if step_kind == "train":
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: TF.loss_fn(cfg, p, batch), has_aux=True)(params)
+            params, opt_state, om = adamw.apply(OPT_CFG, params, grads,
+                                                opt_state)
+            return params, opt_state, {"loss": loss, **metrics, **om}
+
+        o_specs = jax.eval_shape(adamw.init, p_specs)
+        o_shard = SH.opt_state_sharding(p_shard, o_specs)
+        b_shard = SH.lm_batch_sharding(mesh, in_specs)
+        metrics_shard = {k: _rep(mesh) for k in
+                         ("loss", "nll", "aux", "grad_norm", "lr")}
+        return Cell(arch_id, shape_name, step_kind, train_step,
+                    (p_specs, o_specs, in_specs),
+                    (p_shard, o_shard, b_shard),
+                    (p_shard, o_shard, metrics_shard),
+                    donate_argnums=(0, 1), cfg=cfg,
+                    meta=dict(tokens=int(jnp.prod(jnp.asarray(
+                        in_specs["tokens"].shape)))))
+
+    if step_kind == "prefill":
+        b, s = in_specs["tokens"].shape
+        if s >= 8192 and getattr(cfg, "attn_q_chunk", None) is None:
+            # boxed attention by default for long prefill (§Perf qwen2 v1:
+            # peak 3808 -> 60 GiB/dev, collective term 104 -> 27 s)
+            import dataclasses
+            cfg = dataclasses.replace(cfg, attn_q_chunk=1024)
+
+        def prefill_step(params, tokens):
+            return TF.prefill(cfg, params, tokens)
+
+        cache_specs = TF.cache_specs(cfg, b, s)
+        c_shard = SH.lm_cache_sharding(mesh, cache_specs)
+        tok_shard = _batched(mesh, b, 2)
+        logits_shard = _batched(mesh, b, 2, "model", 1)
+        return Cell(arch_id, shape_name, step_kind, prefill_step,
+                    (p_specs, in_specs["tokens"]),
+                    (p_shard, tok_shard),
+                    (c_shard, logits_shard),
+                    donate_argnums=(), cfg=cfg,
+                    meta=dict(tokens=b * s))
+
+    if step_kind == "decode":
+        b, _ = in_specs["token"].shape
+        # cache max_len: read from the cache specs (k: (L,B,S,kv,dh))
+        leaf = jax.tree_util.tree_leaves(in_specs["cache"])[0]
+        max_len = leaf.shape[2] if leaf.ndim >= 4 else leaf.shape[1]
+
+        def serve_step(params, cache, token, pos):
+            return TF.decode_step(cfg, params, cache, token, pos)
+
+        c_shard = SH.lm_cache_sharding(mesh, in_specs["cache"])
+        tok_shard = _batched(mesh, b, 2)
+        pos_shard = _rep(mesh)
+        logits_shard = _batched(mesh, b, 2, "model", 1)
+        return Cell(arch_id, shape_name, step_kind, serve_step,
+                    (p_specs, in_specs["cache"], in_specs["token"],
+                     in_specs["pos"]),
+                    (p_shard, c_shard, tok_shard, pos_shard),
+                    (logits_shard, c_shard),
+                    donate_argnums=(1,), cfg=cfg,
+                    meta=dict(tokens=b, kv_len=max_len))
+
+    raise ValueError(step_kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _build_gnn(arch_id, shape_name, step_kind, cfg, in_specs, mesh) -> Cell:
+    shapes_tree = GNN.param_shapes(cfg)
+    p_specs = GNN.param_specs(cfg)
+    p_shard = SH.gnn_param_sharding(mesh, shapes_tree)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: GNN.loss_fn(cfg, p, batch), has_aux=True)(params)
+        params, opt_state, om = adamw.apply(OPT_CFG, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **om}
+
+    o_specs = jax.eval_shape(adamw.init, p_specs)
+    o_shard = SH.opt_state_sharding(p_shard, o_specs)
+    b_shard = SH.gnn_batch_sharding(mesh, in_specs)
+    metrics_shard = {k: _rep(mesh) for k in ("loss", "grad_norm", "lr")}
+    n_edges = in_specs["edge_src"].shape[0]
+    return Cell(arch_id, shape_name, step_kind, train_step,
+                (p_specs, o_specs, in_specs),
+                (p_shard, o_shard, b_shard),
+                (p_shard, o_shard, metrics_shard),
+                donate_argnums=(0, 1), cfg=cfg,
+                meta=dict(n_edges=n_edges,
+                          n_nodes=in_specs["node_feat"].shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# DLRM cells
+# ---------------------------------------------------------------------------
+
+def _build_dlrm(arch_id, shape_name, step_kind, cfg, in_specs, mesh) -> Cell:
+    shapes_tree = DLRM.param_shapes(cfg)
+    p_specs = DLRM.param_specs(cfg)
+    p_shard = SH.dlrm_param_sharding(mesh, shapes_tree)
+    b_shard = SH.dlrm_batch_sharding(mesh, in_specs)
+    dp = SH.dp_axes(mesh)
+
+    if step_kind == "train":
+        if getattr(cfg, "sparse_optimizer", False):
+            train_step = DLRM.make_sparse_train_step(cfg, OPT_CFG)
+        else:
+            def train_step(params, opt_state, batch):
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: DLRM.loss_fn(cfg, p, batch), has_aux=True)(params)
+                params, opt_state, om = adamw.apply(OPT_CFG, params, grads,
+                                                    opt_state)
+                return params, opt_state, {"loss": loss, **om}
+
+        o_specs = jax.eval_shape(adamw.init, p_specs)
+        o_shard = SH.opt_state_sharding(p_shard, o_specs)
+        if getattr(cfg, "shard_moments_2d", False):
+            # ZeRO-for-embeddings: moments (V, D) shard (model, dp) — the
+            # optimizer state of the 24B tables divides by the full mesh
+            dp = SH.dp_axes(mesh)
+            def _m2(path_shard):
+                flat, tdef = jax.tree_util.tree_flatten_with_path(path_shard)
+                out = []
+                for path, ns in flat:
+                    name = str(path[-1].key) if path else ""
+                    if name.startswith("table"):
+                        ns = NamedSharding(mesh, P("model", dp))
+                    out.append(ns)
+                return jax.tree_util.tree_unflatten(tdef, out)
+            o_shard = adamw.OptState(o_shard.step, _m2(o_shard.m),
+                                     _m2(o_shard.v))
+        metrics_shard = {k: _rep(mesh) for k in ("loss", "grad_norm", "lr")}
+        return Cell(arch_id, shape_name, step_kind, train_step,
+                    (p_specs, o_specs, in_specs),
+                    (p_shard, o_shard, b_shard),
+                    (p_shard, o_shard, metrics_shard),
+                    donate_argnums=(0, 1), cfg=cfg,
+                    meta=dict(batch=in_specs["dense"].shape[0]))
+
+    if step_kind == "serve":
+        def serve_step(params, batch):
+            return DLRM.serve_step(cfg, params, batch)
+
+        out_shard = NamedSharding(mesh, P(dp))
+        return Cell(arch_id, shape_name, step_kind, serve_step,
+                    (p_specs, in_specs), (p_shard, b_shard), out_shard,
+                    donate_argnums=(), cfg=cfg,
+                    meta=dict(batch=in_specs["dense"].shape[0]))
+
+    if step_kind == "retrieval":
+        def retrieval_step(params, batch):
+            return DLRM.retrieval_score(cfg, params, batch)
+
+        out_shard = (_rep(mesh), _rep(mesh))
+        return Cell(arch_id, shape_name, step_kind, retrieval_step,
+                    (p_specs, in_specs), (p_shard, b_shard), out_shard,
+                    donate_argnums=(), cfg=cfg,
+                    meta=dict(candidates=in_specs["candidates"].shape[0]))
+
+    raise ValueError(step_kind)

@@ -1,0 +1,266 @@
+"""DLRM (MLPerf config): sparse embedding tables + dot interaction + MLPs.
+
+The embedding lookup is the hot path; JAX has no EmbeddingBag, so lookups
+are `jnp.take` + segment-sum (kernels/embedding_bag provides the Pallas
+version). Tables are vocab-sharded over the `model` mesh axis: a bag-sum
+over a row-sharded table is a *local masked bag-sum followed by a psum* —
+the sum over bag slots commutes with the shard sum, so no all-to-all of
+rows is needed (DESIGN.md §5; the a2a variant is a §Perf alternative).
+
+The paper connection (DESIGN.md §4): probing/provisioning drives the
+budgeted prefetch of table shards in the out-of-core serving path; the
+lookup itself is the join  Bags(b, slot, id) ⋈ Table(id, vec).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from repro.parallel.sharding import constrain as _constrain
+from .layers import abstractify, materialize
+
+FDTYPE = jnp.float32
+
+# Criteo-1TB per-field vocabulary sizes (MLPerf DLRM benchmark config).
+CRITEO_TABLE_SIZES = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36)
+
+
+@dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    n_dense: int = 13
+    embed_dim: int = 128
+    table_sizes: Tuple[int, ...] = CRITEO_TABLE_SIZES
+    bot_mlp: Tuple[int, ...] = (512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    hot: int = 1                      # multi-hot size per field
+    sparse_optimizer: bool = False    # row-sparse table updates (§Perf)
+    shard_moments_2d: bool = False    # ZeRO-style (model, dp) moment shard
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.table_sizes)
+
+    def params_count(self) -> int:
+        n = sum(self.table_sizes) * self.embed_dim
+        dims = [self.n_dense] + list(self.bot_mlp)
+        n += sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+        n_int = self.n_sparse + 1
+        d_top = self.embed_dim + n_int * (n_int - 1) // 2
+        dims = [d_top] + list(self.top_mlp)
+        n += sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+        return n
+
+
+def param_shapes(cfg: DLRMConfig) -> Dict[str, Any]:
+    s: Dict[str, Any] = {}
+    for t, v in enumerate(cfg.table_sizes):
+        s[f"table{t}"] = ((v, cfg.embed_dim), L.PDTYPE)
+    dims = [cfg.n_dense] + list(cfg.bot_mlp)
+    for i in range(len(dims) - 1):
+        s[f"bot_w{i}"] = ((dims[i], dims[i + 1]), FDTYPE)
+        s[f"bot_b{i}"] = ((dims[i + 1],), FDTYPE)
+    n_int = cfg.n_sparse + 1
+    d_top = cfg.embed_dim + n_int * (n_int - 1) // 2
+    dims = [d_top] + list(cfg.top_mlp)
+    for i in range(len(dims) - 1):
+        s[f"top_w{i}"] = ((dims[i], dims[i + 1]), FDTYPE)
+        s[f"top_b{i}"] = ((dims[i + 1],), FDTYPE)
+    return s
+
+
+def init_params(cfg: DLRMConfig, key):
+    return materialize(param_shapes(cfg), key)
+
+
+def param_specs(cfg: DLRMConfig):
+    return abstractify(param_shapes(cfg))
+
+
+def _mlp(params, x, prefix, n, sigmoid_last=False):
+    for i in range(n):
+        x = x @ params[f"{prefix}_w{i}"] + params[f"{prefix}_b{i}"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+        elif sigmoid_last:
+            pass  # logits returned raw; BCE applies sigmoid
+    return x
+
+
+def forward(cfg: DLRMConfig, params, batch: Dict[str, jnp.ndarray]):
+    """batch: dense (B, 13) f32, sparse (B, 26, hot) int32 -> logits (B,)."""
+    dense = batch["dense"].astype(FDTYPE)
+    sparse = batch["sparse"]
+    b = dense.shape[0]
+    x_dense = _mlp(params, dense, "bot", len(cfg.bot_mlp))       # (B, D)
+
+    embs = []
+    for t in range(cfg.n_sparse):
+        tab = params[f"table{t}"]
+        idx = sparse[:, t, :]                                    # (B, hot)
+        vec = jnp.take(tab, jnp.minimum(idx, tab.shape[0] - 1), axis=0)
+        vec = jnp.sum(vec.astype(FDTYPE), axis=1)                # bag sum
+        embs.append(vec)
+    z = jnp.stack([x_dense] + embs, axis=1)                      # (B, 27, D)
+
+    # dot interaction: lower-triangular pairwise dots
+    zz = jnp.einsum("bnd,bmd->bnm", z, z,
+                    preferred_element_type=jnp.float32)          # (B, 27, 27)
+    n_int = cfg.n_sparse + 1
+    iu, ju = np.tril_indices(n_int, k=-1)
+    pairs = zz[:, iu, ju]                                        # (B, 351)
+    top_in = jnp.concatenate([x_dense, pairs], axis=-1)
+    logits = _mlp(params, top_in, "top", len(cfg.top_mlp))[:, 0]
+    return logits
+
+
+def loss_fn(cfg: DLRMConfig, params, batch):
+    logits = forward(cfg, params, batch)
+    y = batch["labels"].astype(FDTYPE)
+    # numerically-stable BCE-with-logits
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return loss, {"bce": loss}
+
+
+def serve_step(cfg: DLRMConfig, params, batch):
+    """Online/offline scoring: forward only, sigmoid CTR."""
+    return jax.nn.sigmoid(forward(cfg, params, batch))
+
+
+def retrieval_score(cfg: DLRMConfig, params, batch):
+    """retrieval_cand shape: one query against n_candidates item vectors.
+
+    query: dense (1, 13) + sparse (1, 26, hot) -> user vector via the bottom
+    tower; candidates (C, D) scored by batched dot (no loop), top-k returned.
+    """
+    dense = batch["dense"].astype(FDTYPE)
+    x_user = _mlp(params, dense, "bot", len(cfg.bot_mlp))        # (1, D)
+    sparse = batch["sparse"]
+    for t in range(cfg.n_sparse):
+        tab = params[f"table{t}"]
+        idx = sparse[:, t, :]
+        x_user = x_user + jnp.sum(
+            jnp.take(tab, jnp.minimum(idx, tab.shape[0] - 1), axis=0)
+            .astype(FDTYPE), axis=1)
+    cand = batch["candidates"].astype(FDTYPE)                    # (C, D)
+    scores = jnp.einsum("qd,cd->qc", x_user, cand,
+                        preferred_element_type=jnp.float32)      # (1, C)
+    k = min(100, cand.shape[0])
+    top_s, top_i = jax.lax.top_k(scores, k)
+    return top_s, top_i
+
+
+# ---------------------------------------------------------------------------
+# §Perf hillclimb: row-sparse embedding training
+# ---------------------------------------------------------------------------
+
+def make_sparse_train_step(cfg: DLRMConfig, opt_cfg):
+    """Train step whose table updates touch only the rows in the batch.
+
+    The dense AdamW step reads+writes every row of every table plus both
+    f32 moments (~1.5 TB of HBM traffic per step for the 24B-param MLPerf
+    tables) even though a 65k batch references at most B·hot rows/table.
+    This step:
+
+      1. gathers the unique rows per table (jnp.unique, static size B·hot)
+         — the paper's *slice provisioning* applied to optimizer state:
+         only the referenced slice moves through fast memory;
+      2. differentiates w.r.t. the gathered rows (the tables themselves
+         never enter the autodiff graph);
+      3. applies AdamW row-wise and scatters params/moments back with
+         .at[].add deltas (duplicate-pad-safe).
+
+    Lazy-Adam semantics: untouched rows' moments do not decay that step
+    (the standard embedding-optimizer trade; recorded in EXPERIMENTS.md).
+    """
+    from repro.optim import adamw
+
+    tables = [f"table{t}" for t in range(cfg.n_sparse)]
+
+    def step(params, opt_state, batch):
+        sparse = batch["sparse"]                      # (B, T, hot)
+        b = sparse.shape[0]
+        cap_u = b * cfg.hot
+
+        dense_params = {k: v for k, v in params.items() if k not in tables}
+        uniqs, invs, rows0 = {}, {}, {}
+        for t, name in enumerate(tables):
+            vsz = cfg.table_sizes[t]
+            idx = sparse[:, t, :].reshape(-1)
+            uniq = jnp.unique(idx, size=cap_u, fill_value=vsz)
+            inv = jnp.searchsorted(uniq, idx)
+            safe = jnp.minimum(uniq, vsz - 1)
+            uniqs[name], invs[name] = uniq, inv
+            rows0[name] = jnp.take(params[name], safe, axis=0)
+
+        def loss_from(dp, rows):
+            dense = batch["dense"].astype(FDTYPE)
+            x_dense = _mlp(dp, dense, "bot", len(cfg.bot_mlp))
+            embs = []
+            for t, name in enumerate(tables):
+                vec = rows[name][invs[name]].reshape(b, cfg.hot, cfg.embed_dim)
+                embs.append(jnp.sum(vec.astype(FDTYPE), axis=1))
+            z = jnp.stack([x_dense] + embs, axis=1)
+            zz = jnp.einsum("bnd,bmd->bnm", z, z,
+                            preferred_element_type=jnp.float32)
+            n_int = cfg.n_sparse + 1
+            iu, ju = np.tril_indices(n_int, k=-1)
+            top_in = jnp.concatenate([x_dense, zz[:, iu, ju]], axis=-1)
+            logits = _mlp(dp, top_in, "top", len(cfg.top_mlp))[:, 0]
+            y = batch["labels"].astype(FDTYPE)
+            return jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                            jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+        loss, (g_dense, g_rows) = jax.value_and_grad(
+            loss_from, argnums=(0, 1))(dense_params, rows0)
+
+        # dense side: plain AdamW over the small MLP subtree
+        sub_m = {k: opt_state.m[k] for k in dense_params}
+        sub_v = {k: opt_state.v[k] for k in dense_params}
+        sub_state = adamw.OptState(opt_state.step, sub_m, sub_v)
+        new_dense, sub_state2, om = adamw.apply(opt_cfg, dense_params,
+                                                g_dense, sub_state)
+        step_c = sub_state2.step
+        new_params = dict(params)
+        new_params.update(new_dense)
+        new_m = dict(opt_state.m)
+        new_m.update(sub_state2.m)
+        new_v = dict(opt_state.v)
+        new_v.update(sub_state2.v)
+
+        # table side: row-wise lazy AdamW (delta scatters; pads add 0)
+        b1, b2, eps = opt_cfg.beta1, opt_cfg.beta2, opt_cfg.eps
+        lr = adamw.schedule(opt_cfg, step_c)
+        bc1 = 1 - b1 ** step_c.astype(jnp.float32)
+        bc2 = 1 - b2 ** step_c.astype(jnp.float32)
+        for t, name in enumerate(tables):
+            vsz = cfg.table_sizes[t]
+            uniq = uniqs[name]
+            safe = _constrain(jnp.minimum(uniq, vsz - 1), "dlrm_rows")
+            live = (uniq < vsz).astype(jnp.float32)[:, None]
+            g = _constrain(g_rows[name].astype(jnp.float32) * live,
+                           "dlrm_rows")
+            m_rows = jnp.take(opt_state.m[name], safe, axis=0)
+            v_rows = jnp.take(opt_state.v[name], safe, axis=0)
+            m2 = b1 * m_rows + (1 - b1) * g
+            v2 = b2 * v_rows + (1 - b2) * g * g
+            delta = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            new_params[name] = params[name].at[safe].add(
+                (-lr * delta * live).astype(params[name].dtype))
+            new_m[name] = opt_state.m[name].at[safe].add((m2 - m_rows) * live)
+            new_v[name] = opt_state.v[name].at[safe].add((v2 - v_rows) * live)
+
+        new_state = adamw.OptState(step_c, new_m, new_v)
+        return new_params, new_state, {"loss": loss, **om}
+
+    return step

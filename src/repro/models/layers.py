@@ -1,0 +1,369 @@
+"""Shared model layers (pure JAX, functional; params are nested dicts).
+
+Conventions:
+  * params are bf16 (norm scales f32); matmuls accumulate in f32 via
+    preferred_element_type; losses/softmaxes in f32.
+  * every layer has ``<name>_shapes(cfg) -> {name: (shape, dtype)}`` used
+    both by real init (smoke tests) and by the dry-run's ShapeDtypeStruct
+    path (no allocation for the full-size configs).
+  * attention supports GQA (+ optional QKV bias, Qwen-style), optional
+    chunked-local masking (Llama-4 iRoPE style) and NoPE layers, and MLA
+    (DeepSeek-V2 latent KV compression) as a separate function.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import constrain as _constrain
+
+PDTYPE = jnp.bfloat16   # parameter dtype
+NDTYPE = jnp.float32    # norm-scale dtype
+ADTYPE = jnp.bfloat16   # activation dtype
+
+
+def set_dtypes(params=jnp.bfloat16, acts=jnp.bfloat16) -> None:
+    """Switch global param/activation dtypes.
+
+    Full-size configs stay bf16 (dry-run only *compiles*); CPU smoke tests
+    call ``set_dtypes(jnp.float32, jnp.float32)`` because the CPU backend
+    cannot *execute* some bf16xbf16->f32 dot shapes. Modules must reference
+    ``layers.PDTYPE`` (module attribute), not import it by value."""
+    global PDTYPE, ADTYPE
+    PDTYPE = params
+    ADTYPE = acts
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def materialize(shapes: Dict[str, Any], key: jax.Array) -> Dict[str, Any]:
+    """Turn a {name: (shape, dtype)} tree into initialized arrays.
+
+    Name-aware: keys containing 'norm' get ones (RMS/LN scales); bias-like
+    keys (b*, *_b<i>, eps) get zeros; everything else fan-in-scaled normal."""
+    is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
+                         and isinstance(x[0], tuple))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes, is_leaf=is_leaf)
+    keys = jax.random.split(key, max(1, len(flat)))
+    out = []
+    for (path, (shape, dtype)), k in zip(flat, keys):
+        name = str(path[-1].key) if path else ""
+        if "norm" in name:
+            out.append(jnp.ones(shape, dtype))
+        elif name == "eps" or name.startswith("b") and len(shape) == 1 \
+                or "_b" in name:
+            out.append(jnp.zeros(shape, dtype))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / math.sqrt(max(1, fan_in))
+            out.append((jax.random.normal(k, shape, jnp.float32) * std)
+                       .astype(dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstractify(shapes: Dict[str, Any]):
+    """Same tree as ShapeDtypeStructs (dry-run: zero allocation)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x[0], x[1]),
+        shapes, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, wi: jnp.ndarray, wo: jnp.ndarray) -> jnp.ndarray:
+    """Fused gate+up projection: wi (d, 2*f), wo (f, d)."""
+    h = jnp.einsum("...d,df->...f", x, wi,
+                   preferred_element_type=jnp.float32)
+    gate, up = jnp.split(h, 2, axis=-1)
+    act = jax.nn.silu(gate) * up
+    return jnp.einsum("...f,fd->...d", act.astype(x.dtype), wo,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta))              # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attention_shapes(d_model: int, n_heads: int, n_kv: int, d_head: int,
+                     qkv_bias: bool) -> Dict[str, Any]:
+    s = {
+        "wq": ((d_model, n_heads * d_head), PDTYPE),
+        "wk": ((d_model, n_kv * d_head), PDTYPE),
+        "wv": ((d_model, n_kv * d_head), PDTYPE),
+        "wo": ((n_heads * d_head, d_model), PDTYPE),
+    }
+    if qkv_bias:
+        s["bq"] = ((n_heads * d_head,), NDTYPE)
+        s["bk"] = ((n_kv * d_head,), NDTYPE)
+        s["bv"] = ((n_kv * d_head,), NDTYPE)
+    return s
+
+
+def _causal_mask(sq: int, skv: int, q_off, chunk: Optional[int]) -> jnp.ndarray:
+    qpos = q_off + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if chunk is not None:
+        m = m & (kpos // chunk == qpos // chunk)  # Llama-4 chunked locality
+    return m
+
+
+def gqa_attention(p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                  positions: jnp.ndarray, n_heads: int, n_kv: int,
+                  d_head: int, *, theta: float = 10000.0,
+                  use_rope: bool = True, chunk: Optional[int] = None,
+                  kv_cache: Optional[Tuple] = None,
+                  cache_len: Optional[jnp.ndarray] = None,
+                  q_chunk: Optional[int] = None,
+                  unroll_chunks: bool = False):
+    """x: (B, S, D). With kv_cache=(k,v) of (B, Skv, n_kv, Dh): decode mode —
+    returns (out, (k', v')); else self-attention over x (causal)."""
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, n_heads, d_head)
+    k = k.reshape(b, s, n_kv, d_head)
+    v = v.reshape(b, s, n_kv, d_head)
+    if use_rope:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        skv = ck.shape[1]
+        # write the new K/V at cache_len (decode: s == 1)
+        idx = (cache_len if cache_len is not None else skv - 1)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, idx, axis=1) \
+            if s == 1 else ck
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, idx, axis=1) \
+            if s == 1 else cv
+        k_all, v_all = ck, cv
+        kpos = jnp.arange(skv)[None, :]
+        mask = kpos <= (idx if cache_len is not None else skv - 1)
+        if chunk is not None:
+            qc = (idx) // chunk
+            mask = mask & (kpos // chunk == qc)
+        out = _sdpa(q, k_all, v_all, n_heads, n_kv, mask[:, None, :])
+        y = out.reshape(b, s, n_heads * d_head)
+        y = jnp.einsum("bsh,hd->bsd", y, p["wo"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        return y, (ck, cv)
+
+    mask = _causal_mask(s, s, 0, chunk)
+    out = _sdpa(q, k, v, n_heads, n_kv, mask, q_chunk=q_chunk,
+                unroll_chunks=unroll_chunks)
+    y = out.reshape(b, s, n_heads * d_head)
+    y = jnp.einsum("bsh,hd->bsd", y, p["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y, None
+
+
+def _sdpa(q, k, v, n_heads, n_kv, mask, q_chunk: Optional[int] = None,
+          unroll_chunks: bool = False):
+    """Grouped scaled dot-product attention; f32 logits/softmax.
+
+    Score tensors are sequence-sharded over the model axis (query dim for
+    prefill/train, KV dim for decode) — head counts need not divide the TP
+    size (GQA kv=4 vs model=16), and the O(S²) buffer is the peak-memory
+    driver at 32k (EXPERIMENTS.md §Perf).
+
+    q_chunk: blockwise (Rabe-Staats / flash-style) query chunking — the
+    score buffer shrinks from O(Sq·Skv) to O(q_chunk·Skv). This is the
+    paper's *boxing* applied to attention: partition the (q, kv) search
+    space so the working set fits fast memory (§Perf hillclimb #1).
+    unroll_chunks: unroll the chunk scan (set by the dry-run cost probes —
+    XLA counts while bodies once)."""
+    b, sq, _, dh = q.shape
+    skv = k.shape[1]
+    g = n_heads // n_kv
+    q = q.reshape(b, sq, n_kv, g, dh)
+
+    if q_chunk is not None and sq > q_chunk and sq % q_chunk == 0:
+        n_chunks = sq // q_chunk
+        qs = q.reshape(b, n_chunks, q_chunk, n_kv, g, dh)
+        qs = jnp.moveaxis(qs, 1, 0)                       # (C, B, qc, kv, g, d)
+        if mask.ndim != 2:
+            raise ValueError("q_chunk expects a (Sq, Skv) mask")
+        ms = mask.reshape(n_chunks, q_chunk, skv)
+
+        def chunk(carry, inp):
+            qc, mc = inp
+            oc = _sdpa_core(qc, k, v, g, dh, mc[None, None, None])
+            return carry, oc
+
+        _, outs = jax.lax.scan(chunk, 0, (qs, ms),
+                               unroll=n_chunks if unroll_chunks else 1)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, n_kv, g, dh)
+        return out.reshape(b, sq, n_heads, dh)
+
+    m = mask[None, None, None, :, :] if mask.ndim == 2 else \
+        (mask[:, None, None, :, :] if mask.ndim == 3 else mask)
+    out = _sdpa_core(q, k, v, g, dh, m, constrain=True)
+    return out.reshape(b, sq, n_heads, dh)
+
+
+def _sdpa_core(q, k, v, g, dh, m, constrain: bool = False):
+    """One (q-block × full-KV) attention tile: (B, qc, kv, g, d) x
+    (B, S, kv, d) -> (B, qc, kv, g, d)."""
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32)
+    if constrain:
+        logits = _constrain(logits, "attn_q" if q.shape[1] > 1 else "attn_s")
+    logits = logits / math.sqrt(dh)
+    neg = jnp.finfo(jnp.float32).min
+    logits = jnp.where(m, logits, neg)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", w, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+
+def mla_shapes(d_model: int, n_heads: int, q_lora: int, kv_lora: int,
+               qk_nope: int, qk_rope: int, v_head: int) -> Dict[str, Any]:
+    return {
+        "wq_a": ((d_model, q_lora), PDTYPE),
+        "q_a_norm": ((q_lora,), NDTYPE),
+        "wq_b": ((q_lora, n_heads * (qk_nope + qk_rope)), PDTYPE),
+        "wkv_a": ((d_model, kv_lora + qk_rope), PDTYPE),
+        "kv_a_norm": ((kv_lora,), NDTYPE),
+        "wkv_b": ((kv_lora, n_heads * (qk_nope + v_head)), PDTYPE),
+        "wo": ((n_heads * v_head, d_model), PDTYPE),
+    }
+
+
+def mla_attention(p, x, positions, n_heads, q_lora, kv_lora, qk_nope,
+                  qk_rope, v_head, *, theta: float = 10000.0,
+                  kv_cache=None, cache_len=None,
+                  q_chunk: Optional[int] = None,
+                  unroll_chunks: bool = False):
+    """DeepSeek-V2 MLA. Decode cache stores the *compressed* latent
+    (B, S, kv_lora + qk_rope) — the memory win that defines MLA."""
+    b, s, d = x.shape
+    qa = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"],
+                             preferred_element_type=jnp.float32).astype(x.dtype),
+                  p["q_a_norm"])
+    q = jnp.einsum("bsr,rh->bsh", qa, p["wq_b"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = q.reshape(b, s, n_heads, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = apply_rope(q_rope, positions, theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+    latent, k_rope_in = kv_a[..., :kv_lora], kv_a[..., kv_lora:]
+    latent = rms_norm(latent, p["kv_a_norm"])
+    k_rope = apply_rope(k_rope_in[..., None, :], positions, theta)  # (B,S,1,r)
+
+    if kv_cache is not None:
+        c_lat, c_kr = kv_cache
+        skv = c_lat.shape[1]
+        idx = cache_len if cache_len is not None else skv - 1
+        if s == 1:
+            c_lat = jax.lax.dynamic_update_slice_in_dim(c_lat, latent, idx, 1)
+            c_kr = jax.lax.dynamic_update_slice_in_dim(
+                c_kr, k_rope[..., 0, :], idx, 1)
+        latent_all, k_rope_all = c_lat, c_kr
+        kpos = jnp.arange(skv)[None, :]
+        mask = (kpos <= idx)[:, None, :]
+    else:
+        latent_all, k_rope_all = latent, k_rope[..., 0, :]
+        mask = _causal_mask(s, s, 0, None)
+        c_lat = c_kr = None
+
+    kv = jnp.einsum("bsr,rh->bsh", latent_all, p["wkv_b"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    kv = kv.reshape(b, latent_all.shape[1], n_heads, qk_nope + v_head)
+    k_nope, v = kv[..., :qk_nope], kv[..., qk_nope:]
+
+    scale = 1.0 / math.sqrt(qk_nope + qk_rope)
+
+    def _mla_tile(qn, qr, m):
+        lg = (jnp.einsum("bqhd,bshd->bhqs", qn, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bsd->bhqs", qr, k_rope_all,
+                           preferred_element_type=jnp.float32)) * scale
+        lg = jnp.where(m, lg, jnp.finfo(jnp.float32).min)
+        ww = jax.nn.softmax(lg, axis=-1).astype(x.dtype)
+        return ww, lg
+
+    if q_chunk is not None and s > q_chunk and s % q_chunk == 0 \
+            and kv_cache is None and mask.ndim == 2:
+        # blockwise query chunking (boxing applied to attention): the
+        # (B, H, S, S) score buffer becomes (B, H, qc, S) per step.
+        n_chunks = s // q_chunk
+        qn_c = jnp.moveaxis(q_nope.reshape(b, n_chunks, q_chunk,
+                                           n_heads, qk_nope), 1, 0)
+        qr_c = jnp.moveaxis(q_rope.reshape(b, n_chunks, q_chunk,
+                                           n_heads, qk_rope), 1, 0)
+        m_c = mask.reshape(n_chunks, q_chunk, latent_all.shape[1])
+
+        def chunk(carry, inp):
+            qn1, qr1, m1 = inp
+            w1, _ = _mla_tile(qn1, qr1, m1[None, None])
+            o1 = jnp.einsum("bhqs,bshd->bqhd", w1, v,
+                            preferred_element_type=jnp.float32).astype(x.dtype)
+            return carry, o1
+
+        _, outs = jax.lax.scan(chunk, 0, (qn_c, qr_c, m_c),
+                               unroll=n_chunks if unroll_chunks else 1)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, n_heads, v_head)
+    else:
+        m = mask[None, None, :, :] if mask.ndim == 2 else mask[:, None, :, :]
+        w, _ = _mla_tile(q_nope, q_rope, m)
+        w = _constrain(w, "mla_scores")
+        out = jnp.einsum("bhqs,bshd->bqhd", w, v,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, n_heads * v_head), p["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if kv_cache is not None:
+        return y, (c_lat, c_kr)
+    return y, None

@@ -1,0 +1,203 @@
+"""Mixture-of-Experts FFN (top-k routing, shared experts, EP-ready).
+
+Dispatch is the dense/einsum ("capacity-free") formulation: per-token expert
+weights form a (tokens, E) matrix contracted against expert-stacked weights.
+This is deterministic, drop-free, and shards cleanly with experts on the
+``model`` mesh axis (the contraction over E becomes a local slice + psum —
+XLA inserts the reduce-scatter/all-gather pair). The all-to-all token-
+shuffle variant is a §Perf hillclimb alternative discussed in EXPERIMENTS.md.
+
+Routing: softmax-then-topk with renormalization (DeepSeek-V2 style); an
+auxiliary load-balance loss (Switch-style) is returned for training.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from repro.parallel.sharding import constrain as _constrain
+from .layers import swiglu
+
+
+def moe_shapes(d_model: int, d_ff: int, n_experts: int,
+               n_shared: int) -> Dict[str, Any]:
+    s = {
+        "router": ((d_model, n_experts), L.NDTYPE),
+        "wi": ((n_experts, d_model, 2 * d_ff), L.PDTYPE),
+        "wo": ((n_experts, d_ff, d_model), L.PDTYPE),
+    }
+    if n_shared:
+        s["shared_wi"] = ((d_model, 2 * d_ff * n_shared), L.PDTYPE)
+        s["shared_wo"] = ((d_ff * n_shared, d_model), L.PDTYPE)
+    return s
+
+
+def moe_ffn(p: Dict[str, jnp.ndarray], x: jnp.ndarray, top_k: int
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    top_w, top_i = jax.lax.top_k(probs, top_k)                  # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    n_e = probs.shape[-1]
+    # dense combine weights: (T, E), zero outside the top-k
+    combine = jnp.zeros_like(probs)
+    combine = jax.vmap(lambda c, i, w: c.at[i].add(w))(combine, top_i, top_w)
+
+    # einsum dispatch: every expert sees every token, weighted; contraction
+    # over E shards with experts on the model axis.
+    h = jnp.einsum("td,edf->tef", xt, p["wi"],
+                   preferred_element_type=jnp.float32)          # (T, E, 2F)
+    gate, up = jnp.split(h, 2, axis=-1)
+    act = (jax.nn.silu(gate) * up).astype(x.dtype)
+    eo = jnp.einsum("tef,efd->ted", act, p["wo"],
+                    preferred_element_type=jnp.float32)         # (T, E, D)
+    out = jnp.einsum("ted,te->td", eo, combine).astype(x.dtype)
+
+    if "shared_wi" in p:
+        out = out + swiglu(xt, p["shared_wi"], p["shared_wo"])
+
+    # Switch-style load-balance aux: E * Σ_e f_e · P_e
+    f = jnp.mean(combine > 0, axis=0)          # fraction routed per expert
+    pbar = jnp.mean(probs, axis=0)
+    aux = n_e * jnp.sum(f * pbar)
+    return out.reshape(b, s, d), aux.astype(jnp.float32)
+
+
+def moe_ffn_gathered(p: Dict[str, jnp.ndarray], x: jnp.ndarray, top_k: int,
+                     capacity_factor: float = 1.25
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """GShard-style grouped capacity dispatch (the production variant).
+
+    Tokens are routed *within each batch row* (group): capacity
+    C = cf·S·k/E per row, positions via a per-row cumsum — embarrassingly
+    parallel over the (data-sharded) batch axis, with experts on the model
+    axis. Expert flops are O(B·S·k·cf·D·F) — top-k-scaled, never O(T·E·F)
+    like the dense einsum form. Overflow tokens are dropped (standard
+    capacity semantics; cf controls the drop rate)."""
+    b, s, d = x.shape
+    n_e = p["router"].shape[-1]
+    cap = max(1, int(capacity_factor * s * top_k / n_e))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (B, S, E)
+    top_w, top_i = jax.lax.top_k(probs, top_k)                  # (B, S, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    flat_e = top_i.reshape(b, s * top_k)                        # (B, S·k)
+    flat_w = top_w.reshape(b, s * top_k)
+    flat_t = jnp.tile(jnp.repeat(jnp.arange(s), top_k)[None], (b, 1))
+    onehot = jax.nn.one_hot(flat_e, n_e, dtype=jnp.int32)       # (B, S·k, E)
+    pos = jnp.sum(jnp.cumsum(onehot, axis=1) * onehot, axis=-1) - 1
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, n_e * cap)       # (B, S·k)
+
+    def dispatch_row(xr, slot_r, tok_r):
+        g = jnp.zeros((n_e * cap + 1, d), xr.dtype)
+        return g.at[slot_r].set(xr[tok_r])[:-1]
+
+    ge = jax.vmap(dispatch_row)(x, slot, flat_t)                # (B, E·cap, D)
+    ge = ge.reshape(b, n_e, cap, d)
+    ge = _constrain(ge, "moe_ge")                               # EP over model
+    h = jnp.einsum("becd,edf->becf", ge, p["wi"],
+                   preferred_element_type=jnp.float32)
+    gate, up = jnp.split(h, 2, axis=-1)
+    act = (jax.nn.silu(gate) * up).astype(x.dtype)
+    eo = jnp.einsum("becf,efd->becd", act, p["wo"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    flat_out = eo.reshape(b, n_e * cap, d)
+
+    def combine_row(fo, slot_r, tok_r, w_r, keep_r):
+        contrib = jnp.where(keep_r, w_r, 0.0)[:, None].astype(fo.dtype) * \
+            fo[jnp.minimum(slot_r, n_e * cap - 1)]
+        return jnp.zeros((s, d), fo.dtype).at[tok_r].add(contrib)
+
+    out = jax.vmap(combine_row)(flat_out, slot, flat_t, flat_w, keep)
+
+    if "shared_wi" in p:
+        out = out + swiglu(x.reshape(b * s, d), p["shared_wi"],
+                           p["shared_wo"]).reshape(b, s, d)
+    f = jnp.mean(jax.nn.one_hot(top_i, n_e), axis=(0, 1, 2))
+    aux = n_e * jnp.sum(f * jnp.mean(probs, axis=(0, 1)))
+    return out, aux.astype(jnp.float32)
+
+
+def moe_ffn_sorted(p: Dict[str, jnp.ndarray], x: jnp.ndarray, top_k: int,
+                   capacity_factor: float = 1.25
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based grouped dispatch (§Perf hillclimb: deepseek train_4k).
+
+    ``moe_ffn_gathered`` ranks tokens within their expert bucket via a
+    cumsum over a (B, S·k, E) one-hot — an O(T·E) int32 buffer that
+    dominates peak memory at E=160 (4 TB global for the train_4k cell).
+    Sorting (B, S·k) expert keys instead gives ranks in O(T log T) compute
+    and O(T) memory: rank = index_in_sorted − first_index_of_expert
+    (searchsorted on the sorted keys). Same capacity semantics, same
+    output (dispatch order within an expert differs, sums are identical).
+    """
+    b, s, d = x.shape
+    n_e = p["router"].shape[-1]
+    cap = max(1, int(capacity_factor * s * top_k / n_e))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, top_k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    t = s * top_k
+    flat_e = top_i.reshape(b, t)
+    flat_w = top_w.reshape(b, t)
+    flat_t = jnp.tile(jnp.repeat(jnp.arange(s), top_k)[None], (b, 1))
+
+    # localize the scatter/gather: with the residual stream sequence-
+    # sharded (SP), dispatching across model shards makes SPMD materialize
+    # u32 index freight for every (row, feature) pair; un-sharding S for
+    # the dispatch keeps scatters device-local, and the single re-shard to
+    # expert-parallel layout happens on the contiguous ge tensor instead
+    x = _constrain(x, "moe_x_local")
+
+    order = jnp.argsort(flat_e, axis=1, stable=True)            # (B, T)
+    sorted_e = jnp.take_along_axis(flat_e, order, 1)
+    first = jax.vmap(lambda se: jnp.searchsorted(se, se, side="left"))(sorted_e)
+    pos = jnp.arange(t)[None, :] - first                        # rank in expert
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_e * cap + pos, n_e * cap)
+    tok_s = jnp.take_along_axis(flat_t, order, 1)
+    w_s = jnp.take_along_axis(flat_w, order, 1)
+
+    def dispatch_row(xr, slot_r, tok_r):
+        g = jnp.zeros((n_e * cap + 1, d), xr.dtype)
+        return g.at[slot_r].set(xr[tok_r])[:-1]
+
+    ge = jax.vmap(dispatch_row)(x, slot, tok_s).reshape(b, n_e, cap, d)
+    ge = _constrain(ge, "moe_ge")
+    h = jnp.einsum("becd,edf->becf", ge, p["wi"],
+                   preferred_element_type=jnp.float32)
+    gate, up = jnp.split(h, 2, axis=-1)
+    act = (jax.nn.silu(gate) * up).astype(x.dtype)
+    eo = jnp.einsum("becf,efd->becd", act, p["wo"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    flat_out = eo.reshape(b, n_e * cap, d)
+
+    def combine_row(fo, slot_r, tok_r, w_r, keep_r):
+        contrib = jnp.where(keep_r, w_r, 0.0)[:, None].astype(fo.dtype) * \
+            fo[jnp.minimum(slot_r, n_e * cap - 1)]
+        return jnp.zeros((s, d), fo.dtype).at[tok_r].add(contrib)
+
+    out = jax.vmap(combine_row)(flat_out, slot, tok_s, w_s, keep)
+
+    if "shared_wi" in p:
+        out = out + swiglu(x.reshape(b * s, d), p["shared_wi"],
+                           p["shared_wo"]).reshape(b, s, d)
+    f = jnp.mean(jax.nn.one_hot(top_i, n_e), axis=(0, 1, 2))
+    aux = n_e * jnp.sum(f * jnp.mean(probs, axis=(0, 1)))
+    return out, aux.astype(jnp.float32)

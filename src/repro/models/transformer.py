@@ -1,0 +1,384 @@
+"""LM transformer family: dense GQA, MLA, and MoE variants (pure JAX).
+
+Structure is pattern-based so heterogeneous stacks (DeepSeek's dense first
+layer, Llama-4's interleaved MoE / chunked-local layers) still compile as a
+single `lax.scan` over stacked layer params — essential for compile time at
+60 layers on a 512-device mesh (HLO is O(pattern), not O(n_layers)).
+
+API (all functional):
+  param_shapes(cfg) / init_params(cfg, key) / param_specs(cfg)
+  forward(cfg, params, tokens)                  -> logits
+  loss_fn(cfg, params, batch)                   -> (loss, metrics)
+  prefill(cfg, params, tokens)                  -> (cache, last_logits)
+  decode_step(cfg, params, cache, token, pos)   -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from repro.parallel.sharding import constrain as _constrain
+from .moe import moe_ffn, moe_ffn_gathered, moe_shapes
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    ffn: str = "dense"                  # "dense" | "moe"
+    use_rope: bool = True               # False => NoPE (Llama-4 global layers)
+    chunk: Optional[int] = None         # chunked-local attention window
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    prefix: Tuple[LayerSpec, ...] = ()
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    d_ff_moe: int = 0
+    moe_impl: str = "gathered"          # gathered | gathered_sort | dense
+    # MLA (DeepSeek-V2)
+    mla: bool = False
+    q_lora: int = 0
+    kv_lora: int = 0
+    qk_nope: int = 0
+    qk_rope: int = 0
+    v_head: int = 0
+    tie_embeddings: bool = False
+    remat: str = "layer"                # "none" | "layer" | "dots"
+    attn_q_chunk: Optional[int] = None  # blockwise attention query chunk
+    scan_unroll: bool = False           # True: unroll the layer scan (the
+                                        # dry-run cost probes need unrolled
+                                        # bodies: XLA cost analysis counts
+                                        # `while` bodies once per program)
+
+    @property
+    def n_repeats(self) -> int:
+        body = self.n_layers - len(self.prefix)
+        assert body % len(self.pattern) == 0, (self.n_layers, self.pattern)
+        return body // len(self.pattern)
+
+    def params_count(self) -> int:
+        """Total parameters (for 6ND model-flops accounting)."""
+        import math as _math
+        tree = param_shapes(self)
+        return sum(_math.prod(s[0])
+                   for s in jax.tree_util.tree_leaves(
+                       tree, is_leaf=_is_shape_leaf))
+
+    def active_params_count(self) -> int:
+        """Active parameters per token (MoE: top_k of n_experts)."""
+        total = self.params_count()
+        if self.n_experts == 0:
+            return total
+        # subtract inactive expert fraction
+        n_moe_layers = sum(1 for s in self.pattern if s.ffn == "moe") \
+            * self.n_repeats + sum(1 for s in self.prefix if s.ffn == "moe")
+        per_expert = self.d_model * 2 * self.d_ff_moe + self.d_ff_moe * self.d_model
+        inactive = n_moe_layers * (self.n_experts - self.top_k) * per_expert
+        return total - inactive
+
+
+def _is_shape_leaf(x):
+    return isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
+
+
+# ---------------------------------------------------------------------------
+# parameter shapes
+# ---------------------------------------------------------------------------
+
+def _layer_shapes(cfg: TransformerConfig, spec: LayerSpec) -> Dict[str, Any]:
+    if cfg.mla:
+        attn = L.mla_shapes(cfg.d_model, cfg.n_heads, cfg.q_lora, cfg.kv_lora,
+                            cfg.qk_nope, cfg.qk_rope, cfg.v_head)
+    else:
+        attn = L.attention_shapes(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.d_head, cfg.qkv_bias)
+    if spec.ffn == "moe":
+        ffn = moe_shapes(cfg.d_model, cfg.d_ff_moe, cfg.n_experts, cfg.n_shared)
+    else:
+        ffn = {"wi": ((cfg.d_model, 2 * cfg.d_ff), L.PDTYPE),
+               "wo": ((cfg.d_ff, cfg.d_model), L.PDTYPE)}
+    return {"attn": attn, "ffn": ffn,
+            "norm1": ((cfg.d_model,), L.NDTYPE),
+            "norm2": ((cfg.d_model,), L.NDTYPE)}
+
+
+def _stack_shapes(tree: Dict[str, Any], n: int) -> Dict[str, Any]:
+    return jax.tree_util.tree_map(
+        lambda x: ((n,) + x[0], x[1]), tree, is_leaf=_is_shape_leaf)
+
+
+def param_shapes(cfg: TransformerConfig) -> Dict[str, Any]:
+    shapes: Dict[str, Any] = {
+        "embed": ((cfg.vocab, cfg.d_model), L.PDTYPE),
+        "final_norm": ((cfg.d_model,), L.NDTYPE),
+    }
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = ((cfg.d_model, cfg.vocab), L.PDTYPE)
+    for i, spec in enumerate(cfg.prefix):
+        shapes[f"prefix{i}"] = _layer_shapes(cfg, spec)
+    for i, spec in enumerate(cfg.pattern):
+        shapes[f"block{i}"] = _stack_shapes(_layer_shapes(cfg, spec),
+                                            cfg.n_repeats)
+    return shapes
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array):
+    return L.materialize(param_shapes(cfg), key)
+
+
+def param_specs(cfg: TransformerConfig):
+    return L.abstractify(param_shapes(cfg))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg: TransformerConfig, spec: LayerSpec, p, x, positions,
+                 kv_cache=None, cache_len=None):
+    h = L.rms_norm(x, p["norm1"])
+    if cfg.mla:
+        attn_out, new_cache = L.mla_attention(
+            p["attn"], h, positions, cfg.n_heads, cfg.q_lora, cfg.kv_lora,
+            cfg.qk_nope, cfg.qk_rope, cfg.v_head, theta=cfg.rope_theta,
+            kv_cache=kv_cache, cache_len=cache_len,
+            q_chunk=cfg.attn_q_chunk, unroll_chunks=cfg.scan_unroll)
+    else:
+        attn_out, new_cache = L.gqa_attention(
+            p["attn"], h, positions, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+            theta=cfg.rope_theta, use_rope=spec.use_rope, chunk=spec.chunk,
+            kv_cache=kv_cache, cache_len=cache_len,
+            q_chunk=cfg.attn_q_chunk, unroll_chunks=cfg.scan_unroll)
+    x = x + attn_out
+    h = L.rms_norm(x, p["norm2"])
+    aux = jnp.float32(0)
+    if spec.ffn == "moe":
+        if cfg.moe_impl == "dense":
+            ffn_out, aux = moe_ffn(p["ffn"], h, cfg.top_k)
+        elif cfg.moe_impl == "gathered_sort":
+            from .moe import moe_ffn_sorted
+            ffn_out, aux = moe_ffn_sorted(p["ffn"], h, cfg.top_k)
+        else:
+            ffn_out, aux = moe_ffn_gathered(p["ffn"], h, cfg.top_k)
+    else:
+        b, s, d = h.shape
+        ffn_out = L.swiglu(h.reshape(b * s, d), p["ffn"]["wi"],
+                           p["ffn"]["wo"]).reshape(b, s, d)
+    return x + ffn_out, aux, new_cache
+
+
+def forward(cfg: TransformerConfig, params, tokens: jnp.ndarray,
+            last_only: bool = False):
+    """tokens (B, S) -> logits (B, S, V) [or (B, V) when last_only]."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(L.ADTYPE)
+    x = _constrain(x, "lm_act")
+    positions = jnp.tile(jnp.arange(s)[None, :], (b, 1))
+    aux_total = jnp.float32(0)
+
+    for i, spec in enumerate(cfg.prefix):
+        x, aux, _ = _apply_layer(cfg, spec, params[f"prefix{i}"], x, positions)
+        aux_total += aux
+
+    def body(carry, xs):
+        xc, aux_acc = carry
+        for i, spec in enumerate(cfg.pattern):
+            fn = partial(_apply_layer, cfg, spec)
+            if cfg.remat == "layer":
+                fn = jax.checkpoint(fn)
+            elif cfg.remat == "dots":
+                fn = jax.checkpoint(
+                    fn, policy=jax.checkpoint_policies.checkpoint_dots)
+            xc, aux, _ = fn(xs[f"block{i}"], xc, positions)
+            xc = _constrain(xc, "lm_act")
+            aux_acc += aux
+        return (xc, aux_acc), None
+
+    xs = {f"block{i}": params[f"block{i}"] for i in range(len(cfg.pattern))}
+    (x, aux_total), _ = jax.lax.scan(
+        body, (x, aux_total), xs,
+        unroll=cfg.n_repeats if cfg.scan_unroll else 1)
+
+    x = L.rms_norm(x, params["final_norm"])
+    if last_only:
+        x = x[:, -1, :]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", x, head,
+                        preferred_element_type=jnp.float32)
+    logits = _constrain(logits, "lm_logits" if logits.ndim == 3 else "lm_logits2")
+    return logits, aux_total
+
+
+def loss_fn(cfg: TransformerConfig, params, batch: Dict[str, jnp.ndarray]):
+    """batch: tokens (B, S), targets (B, S). Returns (loss, metrics)."""
+    logits, aux = forward(cfg, params, batch["tokens"])
+    tgt = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    loss = nll + 0.01 * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg: TransformerConfig, batch: int, max_len: int):
+    """Per-layer KV cache shapes (stacked for the scanned blocks)."""
+    if cfg.mla:
+        per = {"latent": ((batch, max_len, cfg.kv_lora), L.ADTYPE),
+               "rope": ((batch, max_len, cfg.qk_rope), L.ADTYPE)}
+    else:
+        per = {"k": ((batch, max_len, cfg.n_kv_heads, cfg.d_head), L.ADTYPE),
+               "v": ((batch, max_len, cfg.n_kv_heads, cfg.d_head), L.ADTYPE)}
+    shapes = {}
+    for i in range(len(cfg.prefix)):
+        shapes[f"prefix{i}"] = per
+    for i in range(len(cfg.pattern)):
+        shapes[f"block{i}"] = _stack_shapes(per, cfg.n_repeats)
+    return shapes
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x[0], x[1]), cache_shapes(cfg, batch, max_len),
+        is_leaf=_is_shape_leaf)
+
+
+def cache_specs(cfg: TransformerConfig, batch: int, max_len: int):
+    return L.abstractify(cache_shapes(cfg, batch, max_len))
+
+
+def _cache_tuple(cfg, c):
+    return (c["latent"], c["rope"]) if cfg.mla else (c["k"], c["v"])
+
+
+def _cache_dict(cfg, t):
+    return {"latent": t[0], "rope": t[1]} if cfg.mla else {"k": t[0], "v": t[1]}
+
+
+def decode_step(cfg: TransformerConfig, params, cache, token: jnp.ndarray,
+                pos: jnp.ndarray):
+    """token (B, 1) int32, pos scalar int32 -> (logits (B, V), cache')."""
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0).astype(L.ADTYPE)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    new_cache = {}
+    for i, spec in enumerate(cfg.prefix):
+        x, _, nc = _apply_layer(cfg, spec, params[f"prefix{i}"], x, positions,
+                                kv_cache=_cache_tuple(cfg, cache[f"prefix{i}"]),
+                                cache_len=pos)
+        new_cache[f"prefix{i}"] = _cache_dict(cfg, nc)
+
+    def body(xc, xs):
+        for i, spec in enumerate(cfg.pattern):
+            xc, _, nc = _apply_layer(
+                cfg, spec, xs[f"p{i}"], xc, positions,
+                kv_cache=_cache_tuple(cfg, xs[f"c{i}"]), cache_len=pos)
+            xs[f"c{i}"] = _cache_dict(cfg, nc)
+        return xc, {k: v for k, v in xs.items() if k.startswith("c")}
+
+    xs = {}
+    for i in range(len(cfg.pattern)):
+        xs[f"p{i}"] = params[f"block{i}"]
+        xs[f"c{i}"] = cache[f"block{i}"]
+    x, new_blocks = jax.lax.scan(
+        body, x, xs, unroll=cfg.n_repeats if cfg.scan_unroll else 1)
+    for i in range(len(cfg.pattern)):
+        new_cache[f"block{i}"] = new_blocks[f"c{i}"]
+
+    x = L.rms_norm(x[:, -1, :], params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x, head,
+                        preferred_element_type=jnp.float32)
+    logits = _constrain(logits, "lm_logits2")
+    return logits, new_cache
+
+
+def prefill(cfg: TransformerConfig, params, tokens: jnp.ndarray,
+            max_len: Optional[int] = None):
+    """Full-sequence prefill; returns (cache, last-token logits).
+
+    The cache is populated by recomputing K/V per layer (projection-only
+    pass reusing forward activations would save flops; recorded as a §Perf
+    candidate). Chunked (Sarathi-style) prefill is used by serve.py for
+    long sequences."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = jnp.take(params["embed"], tokens, axis=0).astype(L.ADTYPE)
+    positions = jnp.tile(jnp.arange(s)[None, :], (b, 1))
+    cache = init_cache(cfg, b, max_len)
+
+    def project_kv(cfg, spec, p, h):
+        if cfg.mla:
+            kv_a = jnp.einsum("bsd,dr->bsr", L.rms_norm(h, p["norm1"]),
+                              p["attn"]["wkv_a"],
+                              preferred_element_type=jnp.float32).astype(h.dtype)
+            lat = L.rms_norm(kv_a[..., :cfg.kv_lora], p["attn"]["kv_a_norm"])
+            kr = L.apply_rope(kv_a[..., None, cfg.kv_lora:], positions,
+                              cfg.rope_theta)[..., 0, :]
+            return {"latent": lat, "rope": kr}
+        hn = L.rms_norm(h, p["norm1"])
+        k = jnp.einsum("bsd,dh->bsh", hn, p["attn"]["wk"],
+                       preferred_element_type=jnp.float32).astype(h.dtype)
+        v = jnp.einsum("bsd,dh->bsh", hn, p["attn"]["wv"],
+                       preferred_element_type=jnp.float32).astype(h.dtype)
+        if "bk" in p["attn"]:
+            k = k + p["attn"]["bk"].astype(h.dtype)
+            v = v + p["attn"]["bv"].astype(h.dtype)
+        k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+        v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+        if spec.use_rope:
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+        return {"k": k, "v": v}
+
+    def pad_c(c):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.pad(a, [(0, 0), (0, max_len - s)] +
+                              [(0, 0)] * (a.ndim - 2)), c)
+
+    for i, spec in enumerate(cfg.prefix):
+        cache[f"prefix{i}"] = pad_c(project_kv(cfg, spec,
+                                               params[f"prefix{i}"], x))
+        x, _, _ = _apply_layer(cfg, spec, params[f"prefix{i}"], x, positions)
+
+    def body(xc, xs):
+        cs = {}
+        for i, spec in enumerate(cfg.pattern):
+            cs[f"c{i}"] = pad_c(project_kv(cfg, spec, xs[f"p{i}"], xc))
+            xc, _, _ = _apply_layer(cfg, spec, xs[f"p{i}"], xc, positions)
+        return xc, cs
+
+    xs = {f"p{i}": params[f"block{i}"] for i in range(len(cfg.pattern))}
+    x, blocks = jax.lax.scan(body, x, xs,
+                             unroll=cfg.n_repeats if cfg.scan_unroll else 1)
+    for i in range(len(cfg.pattern)):
+        cache[f"block{i}"] = blocks[f"c{i}"]
+
+    x = L.rms_norm(x[:, -1, :], params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x, head,
+                        preferred_element_type=jnp.float32)
+    logits = _constrain(logits, "lm_logits2")
+    return cache, logits

@@ -1,0 +1,99 @@
+"""AdamW + schedules + global-norm clipping (functional, pytree-native).
+
+Moments are f32 regardless of param dtype (bf16 params update through f32
+math — no separate master copy; the f32 moments pair carries the precision;
+this halves optimizer HBM vs master-copy designs and is recorded in
+EXPERIMENTS.md §Perf). Moment trees shard exactly like their parameters.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree_util.tree_map(zeros, params),
+                    v=jax.tree_util.tree_map(zeros, params))
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(1.0, cfg.warmup_steps)
+    t = (s - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * \
+        (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def apply(cfg: AdamWConfig, params, grads, state: OptState):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:     # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p2, m2, v2
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,64 @@
+"""Gradient compression with error feedback (DCN-crossing reductions).
+
+At 2 pods the gradient all-reduce crosses the data-center network once per
+step; compressing the DCN leg is the classic distributed-optimization
+trick. Two codecs:
+
+  * bf16: cast (2x); error-free enough in practice, no state.
+  * int8: per-tensor symmetric quantization with error-feedback residuals
+    [1-bit Adam / EF-SGD lineage]: the quantization error is added back
+    into the next step's gradient, preserving convergence.
+
+Both are pure pytree transforms usable inside jit; train.py applies them
+between grad computation and the optimizer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(grads):
+    return jax.tree_util.tree_map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads):
+    return jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+
+
+def init_error_feedback(grads_template):
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_template)
+
+
+def compress_int8_ef(grads, residuals):
+    """Returns ((q, scales), new_residuals). q is int8, scale per tensor."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_r = gf - q.astype(jnp.float32) * scale
+        return (q, scale), new_r
+
+    flat, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residuals)
+    qs, rs = [], []
+    for g, r in zip(flat, flat_r):
+        (q, s), nr = one(g, r)
+        qs.append((q, s))
+        rs.append(nr)
+    return (jax.tree_util.tree_unflatten(tdef, qs),
+            jax.tree_util.tree_unflatten(tdef, rs))
+
+
+def decompress_int8(packed):
+    def one(p):
+        q, s = p
+        return q.astype(jnp.float32) * s
+
+    return jax.tree_util.tree_map(one, packed,
+                                  is_leaf=lambda x: isinstance(x, tuple)
+                                  and len(x) == 2)

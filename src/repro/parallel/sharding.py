@@ -1,0 +1,289 @@
+"""Per-family sharding rules (PartitionSpec trees keyed off param names).
+
+Mesh axes: ("pod", "data", "model") multi-pod or ("data", "model") single.
+``dp`` below = the data-parallel super-axis: ("pod", "data") when the pod
+axis exists — gradient all-reduce crosses DCN exactly once per step.
+
+LM     : FSDP over dp + Megatron TP over model (column/row-parallel pairs);
+         MoE experts over model (EP); KV cache sequence-sharded over model.
+GNN    : nodes/edges row-sharded over every axis (flattened); params
+         replicated (they are KBs; messages dominate).
+DLRM   : embedding tables row(vocab)-sharded over model; MLPs replicated;
+         batch over dp.
+Boxes  : the triangle engine shards the paper's box list over all devices.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# activation-sharding rules: models call ``constrain(x, kind)``; the step
+# builders activate a rule set for the cell's mesh at trace time. With no
+# active rules (CPU smoke tests) this is a no-op.
+# ---------------------------------------------------------------------------
+
+_RULES: Optional[Dict[str, Any]] = None
+_RULES_MESH: Optional[Mesh] = None
+
+
+def set_rules(mesh: Optional[Mesh], family: Optional[str]) -> None:
+    global _RULES, _RULES_MESH
+    if mesh is None or family is None:
+        _RULES, _RULES_MESH = None, None
+        return
+    dp = dp_axes(mesh)
+    alln = all_axes(mesh)
+    if family == "lm":
+        _RULES = {
+            # sequence parallelism on the residual stream: the 28-layer
+            # remat carry stack divides by the TP size (Megatron-SP style)
+            "lm_act": (dp, "model", None),         # (B, S, D)
+            "lm_logits": (dp, None, "model"),      # (B, S, V)
+            "lm_logits2": (dp, "model"),           # (B, V) last-only/decode
+            "moe_ge": (dp, "model", None, None),   # (B, E, cap, D) EP
+            "moe_x_local": (dp, None, None),       # dispatch scatters run
+                                                   # on full-S local rows
+            # attention scores (B, KV, G, Q, S): shard Q (train/prefill)
+            # or S (decode) over model — works for any head count
+            "attn_q": (dp, None, None, "model", None),
+            "attn_s": (dp, None, None, None, "model"),
+            "mla_scores": (dp, "model", None, None),  # (B, H=128, Q, S)
+        }
+    elif family == "gnn":
+        _RULES = {"gnn_nodes": (alln, None)}       # (N, D)
+    elif family == "recsys":
+        _RULES = {"dlrm_act": (dp, None),          # (B, D)
+                  # row-sparse optimizer: replicate the (small) unique-row
+                  # updates so the scatter onto vocab-sharded tables
+                  # partitions by index-masking instead of replicating the
+                  # table (§Perf dlrm_train v2)
+                  "dlrm_rows": (None, None)}
+    _RULES_MESH = mesh
+
+
+def constrain(x, kind: str):
+    if _RULES is None or kind not in _RULES:
+        return x
+    spec = _RULES[kind]
+    dims = x.shape
+    resolved = []
+    for i, a in enumerate(spec[:len(dims)]):
+        if a is None:
+            resolved.append(None)
+        elif _evenly(dims[i], _RULES_MESH, a):
+            resolved.append(a)
+        else:
+            resolved.append(None)
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(_RULES_MESH, P(*resolved)))
+    except Exception:  # outside jit/mesh context: ignore
+        return x
+
+
+def all_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def _ns(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _evenly(dim: int, mesh: Mesh, axes) -> bool:
+    size = int(np.prod([mesh.shape[a] for a in (axes if isinstance(axes, tuple)
+                                                else (axes,))]))
+    return dim % size == 0
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def _lm_leaf_spec(name: str, shape, mesh: Mesh) -> P:
+    dp = dp_axes(mesh)
+    nd = len(shape)
+    # stacked scan blocks carry a leading layer axis -> never sharded
+    lead = (None,) if name.startswith("block") else ()
+    core = shape[len(lead):]
+    key = name.split("/")[-1]
+
+    def fit(dim, axes):
+        return _evenly(dim, mesh, axes)
+
+    if key in ("norm1", "norm2", "final_norm", "q_a_norm", "kv_a_norm"):
+        return P(*lead, None)
+    if key in ("bq", "bk", "bv"):
+        return P(*lead, "model") if fit(core[0], "model") else P(*lead, None)
+    if key == "embed":
+        return P("model" if fit(core[0], "model") else None,
+                 dp if fit(core[1], dp) else None)
+    if key == "lm_head":
+        return P(dp if fit(core[0], dp) else None,
+                 "model" if fit(core[1], "model") else None)
+    if key == "router":
+        return P(*lead, dp if fit(core[0], dp) else None, None)
+    if key in ("wi", "shared_wi", "wq", "wk", "wv", "wq_b", "wkv_b"):
+        if len(core) == 3:  # MoE expert-stacked (E, D, F): EP over model
+            return P(*lead, "model" if fit(core[0], "model") else None,
+                     dp if fit(core[1], dp) else None, None)
+        return P(*lead, dp if fit(core[0], dp) else None,
+                 "model" if fit(core[1], "model") else None)
+    if key in ("wo", "shared_wo"):
+        if len(core) == 3:  # (E, F, D)
+            return P(*lead, "model" if fit(core[0], "model") else None,
+                     None, dp if fit(core[2], dp) else None)
+        return P(*lead, "model" if fit(core[0], "model") else None,
+                 dp if fit(core[1], dp) else None)
+    if key in ("wq_a", "wkv_a"):
+        return P(*lead, dp if fit(core[0], dp) else None, None)
+    # fallback: shard the largest fitting dim over dp
+    spec = [None] * nd
+    for i in np.argsort([-s for s in shape]):
+        if fit(shape[i], dp):
+            spec[i] = dp
+            break
+    return P(*spec)
+
+
+def lm_param_sharding(mesh: Mesh, shapes_tree) -> Any:
+    """Map the {name: (shape, dtype)} tree to NamedShardings."""
+    is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
+                         and isinstance(x[0], tuple))
+    flat, tdef = jax.tree_util.tree_flatten_with_path(shapes_tree,
+                                                      is_leaf=is_leaf)
+    out = []
+    for path, (shape, dtype) in flat:
+        name = "/".join(str(p.key) for p in path)
+        top = str(path[0].key)
+        leaf = str(path[-1].key)
+        lead_name = top if top.startswith("block") else ""
+        out.append(_ns(mesh, _lm_leaf_spec(f"{lead_name}/{leaf}"
+                                           if lead_name else leaf, shape, mesh)))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def lm_batch_sharding(mesh: Mesh, specs: Dict[str, Any]) -> Any:
+    dp = dp_axes(mesh)
+
+    def spec_for(k, v):
+        if k in ("tokens", "targets", "token"):
+            ax = dp if _evenly(v.shape[0], mesh, dp) else None
+            return _ns(mesh, P(ax, *([None] * (len(v.shape) - 1))))
+        if k == "pos":
+            return _ns(mesh, P())
+        raise KeyError(k)
+
+    return {k: spec_for(k, v) if k != "cache" else None
+            for k, v in specs.items()}
+
+
+def lm_cache_sharding(mesh: Mesh, cache_tree) -> Any:
+    """KV caches: batch->dp, sequence->model (flash-decode style: works for
+    any head count, scales KV bandwidth with TP size).
+
+    Stacked-vs-unstacked is decided by the tree path ('block*' subtrees
+    carry a leading layer axis, 'prefix*' do not) — shapes alone are
+    ambiguous (MLA stacked 4-D == GQA unstacked 4-D)."""
+    dp = dp_axes(mesh)
+    flat, tdef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    out = []
+    for path, x in flat:
+        nd = len(x.shape)
+        top = str(path[0].key)
+        if top.startswith("block"):      # stacked (L, B, S, ...)
+            spec = [None, dp, "model"] + [None] * (nd - 3)
+        else:                            # (B, S, ...)
+            spec = [dp, "model"] + [None] * (nd - 2)
+        dims = x.shape
+        for i, a in enumerate(spec):
+            if a is not None and not _evenly(dims[i], mesh, a):
+                spec[i] = None
+        out.append(_ns(mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+# ---------------------------------------------------------------------------
+# GNN / DLRM
+# ---------------------------------------------------------------------------
+
+def gnn_param_sharding(mesh: Mesh, shapes_tree) -> Any:
+    is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
+                         and isinstance(x[0], tuple))
+    return jax.tree_util.tree_map(lambda x: _ns(mesh, P()), shapes_tree,
+                                  is_leaf=is_leaf)
+
+
+def gnn_batch_sharding(mesh: Mesh, specs: Dict[str, Any]) -> Any:
+    axes = all_axes(mesh)
+
+    def leaf(k, v):
+        if not hasattr(v, "shape") or len(v.shape) == 0:
+            return _ns(mesh, P())
+        if _evenly(v.shape[0], mesh, axes):
+            return _ns(mesh, P(axes, *([None] * (len(v.shape) - 1))))
+        return _ns(mesh, P())
+
+    return {k: leaf(k, v) for k, v in specs.items()}
+
+
+def dlrm_param_sharding(mesh: Mesh, shapes_tree) -> Any:
+    is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
+                         and isinstance(x[0], tuple))
+    flat, tdef = jax.tree_util.tree_flatten_with_path(shapes_tree,
+                                                      is_leaf=is_leaf)
+    out = []
+    for path, (shape, dtype) in flat:
+        name = str(path[-1].key)
+        if name.startswith("table") and _evenly(shape[0], mesh, "model"):
+            out.append(_ns(mesh, P("model", None)))
+        else:
+            out.append(_ns(mesh, P()))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def dlrm_batch_sharding(mesh: Mesh, specs: Dict[str, Any]) -> Any:
+    dp = dp_axes(mesh)
+
+    def leaf(k, v):
+        if k == "candidates":
+            ax = "model" if _evenly(v.shape[0], mesh, "model") else None
+            return _ns(mesh, P(ax, None))
+        if len(v.shape) == 0 or not _evenly(v.shape[0], mesh, dp):
+            return _ns(mesh, P())
+        return _ns(mesh, P(dp, *([None] * (len(v.shape) - 1))))
+
+    return {k: leaf(k, v) for k, v in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# generic helpers
+# ---------------------------------------------------------------------------
+
+def replicate(mesh: Mesh, tree) -> Any:
+    return jax.tree_util.tree_map(lambda _: _ns(mesh, P()), tree)
+
+
+def like_tree(sharding_tree, template_tree) -> Any:
+    """Re-key a sharding tree onto an identically-structured template."""
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template_tree),
+        jax.tree_util.tree_leaves(sharding_tree))
+
+
+def opt_state_sharding(param_sharding, opt_state_tree):
+    """Moments shard like params; the step counter is replicated."""
+    from repro.optim.adamw import OptState
+    m = jax.tree_util.tree_map(lambda s: s, param_sharding)
+    first = jax.tree_util.tree_leaves(param_sharding)[0]
+    rep = NamedSharding(first.mesh, P())
+    return OptState(step=rep, m=m, v=m)

@@ -1,0 +1,12 @@
+import jax.numpy as jnp
+import pytest
+
+from repro.models import layers as L
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _cpu_dtypes():
+    # CPU backend cannot execute some bf16 dot shapes; tests run f32.
+    # (The dry-run keeps bf16 — it only compiles.)
+    L.set_dtypes(jnp.float32, jnp.float32)
+    yield

@@ -1,0 +1,115 @@
+"""Data pipeline: generators, sampler, prefetcher, mesh generation."""
+
+import numpy as np
+import pytest
+
+from repro.data.graphs import (clustered_graph, icosahedral_mesh,
+                               make_gnn_batch, random_graph, rmat_graph)
+from repro.data.pipeline import Prefetcher
+from repro.data.recsys import CriteoLikeGenerator
+from repro.data.sampler import NeighborSampler
+from repro.data.tokens import TokenStream
+from repro.core import csr_from_edges
+
+
+class TestGenerators:
+    def test_random_graph_simple(self):
+        src, dst = random_graph(100, 2000, seed=0)
+        assert np.all(src < dst)                       # oriented, no self loops
+        e = set(zip(src.tolist(), dst.tolist()))
+        assert len(e) == len(src)                       # no duplicates
+
+    def test_rmat_powerlaw_ish(self):
+        src, dst = rmat_graph(1 << 12, 40000, seed=0)
+        deg = np.bincount(np.concatenate([src, dst]))
+        # heavy tail: max degree far above mean (vs uniform RAND)
+        assert deg.max() > 8 * deg[deg > 0].mean()
+
+    def test_clustered_graph_has_triangles(self):
+        from repro.core import count_triangles
+        src, dst = clustered_graph(5, 10, p_in=0.9)
+        assert count_triangles(src, dst, method="vectorized") > 50
+
+    def test_token_stream(self):
+        ts = TokenStream(vocab=100, seed=0)
+        b = ts.batch(4, 32)
+        assert b["tokens"].shape == (4, 32)
+        assert b["targets"].shape == (4, 32)
+        # next-token alignment
+        b2 = ts.batch(2, 8)
+        assert b2["tokens"].max() < 100
+
+    def test_criteo_gen(self):
+        gen = CriteoLikeGenerator((100, 50, 20), n_dense=13, hot=2)
+        b = gen.batch(64)
+        assert b["dense"].shape == (64, 13)
+        assert b["sparse"].shape == (64, 3, 2)
+        assert b["sparse"][:, 0].max() < 100
+        assert set(np.unique(b["labels"])) <= {0.0, 1.0}
+        # zipf: index 0 should be the most common
+        counts = np.bincount(b["sparse"][:, 0].ravel())
+        assert counts[0] == counts.max()
+
+
+class TestSampler:
+    def test_block_shapes_and_masks(self):
+        src, dst = random_graph(500, 4000, seed=1)
+        # symmetrize for sampling
+        s2 = np.concatenate([src, dst])
+        d2 = np.concatenate([dst, src])
+        indptr, indices = csr_from_edges(s2, d2, 500)
+        samp = NeighborSampler(indptr, indices, fanout=(5, 3), seed=0)
+        feats = np.random.default_rng(0).standard_normal((500, 16)).astype(np.float32)
+        labels = np.zeros(500, np.int32)
+        batch = samp.padded_batch(np.arange(32), feats, labels,
+                                  blk_nodes=32 * 24, blk_edges=32 * 20)
+        assert batch["node_feat"].shape == (768, 16)
+        ne = int(batch["edge_mask"].sum())
+        assert 0 < ne <= 640
+        # all masked-in edges reference masked-in nodes
+        es = batch["edge_src"][batch["edge_mask"] > 0]
+        ed = batch["edge_dst"][batch["edge_mask"] > 0]
+        nn = int(batch["node_mask"].sum())
+        assert es.max() < nn and ed.max() < nn
+        # only seeds supervised
+        assert batch["label_mask"].sum() <= 32
+
+    def test_fanout_bound(self):
+        src, dst = random_graph(200, 3000, seed=2)
+        s2 = np.concatenate([src, dst]); d2 = np.concatenate([dst, src])
+        indptr, indices = csr_from_edges(s2, d2, 200)
+        samp = NeighborSampler(indptr, indices, fanout=(4,), seed=0)
+        nodes, es, ed = samp.sample_block(np.arange(10))
+        assert len(es) <= 10 * 4
+
+
+class TestPrefetcher:
+    def test_order_preserved(self):
+        out = list(Prefetcher(iter(range(20)), depth=3))
+        assert out == list(range(20))
+
+    def test_error_propagates(self):
+        def gen():
+            yield 1
+            raise RuntimeError("boom")
+        pf = Prefetcher(gen())
+        assert next(pf) == 1
+        with pytest.raises(RuntimeError):
+            list(pf)
+
+
+class TestIcoMesh:
+    def test_refinement_counts(self):
+        verts, src, dst = icosahedral_mesh(2)
+        # V(r) = 10*4^r + 2
+        assert len(verts) == 10 * 4 ** 2 + 2
+        assert np.all(src < dst)
+        np.testing.assert_allclose(np.linalg.norm(verts, axis=1), 1.0,
+                                   rtol=1e-5)
+
+    def test_multimesh_includes_coarse_edges(self):
+        _, s1, d1 = icosahedral_mesh(0)
+        _, s2, d2 = icosahedral_mesh(1)
+        e1 = set(zip(s1.tolist(), d1.tolist()))
+        e2 = set(zip(s2.tolist(), d2.tolist()))
+        assert e1 <= e2     # multimesh = union over levels

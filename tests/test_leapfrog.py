@@ -1,0 +1,124 @@
+"""Faithful LFTJ: generic queries vs set-oracle (hypothesis), iterators."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Atom, LeapfrogTriejoin, Query, TrieArray,
+                        best_rank, brute_force_count, lftj_triangle_count,
+                        orient_edges, rank_for_order, run_query)
+from repro.core.leapfrog import TrieIterator
+
+
+def rel(max_val=10, max_rows=40):
+    return st.lists(st.tuples(st.integers(0, max_val), st.integers(0, max_val)),
+                    min_size=0, max_size=max_rows)
+
+
+class TestTrieIterator:
+    def test_navigation_example20(self):
+        """Paper Example 20 navigation sequence."""
+        tuples = [(1, 1, 3), (1, 1, 4), (1, 1, 5), (2, 1, 1), (2, 3, 8),
+                  (2, 3, 9)]
+        ta = TrieArray.from_tuples(np.asarray(tuples))
+        it = TrieIterator(ta)
+        it.open()
+        assert it.value() == 1
+        it.next()
+        assert it.value() == 2
+        it.open()
+        assert it.value() == 1
+        it.next()
+        assert it.value() == 3
+        it.close()
+        assert it.value() == 2
+
+    def test_seek_galloping(self):
+        ta = TrieArray.from_tuples(np.arange(0, 1000, 7).reshape(-1, 1))
+        it = TrieIterator(ta)
+        it.open()
+        it.seek(350)
+        assert it.value() == 350  # 350 = 7*50
+        it.seek(351)
+        assert it.value() == 357
+        it.seek(2000)
+        assert it.at_end()
+
+
+class TestTriangles:
+    @settings(max_examples=25, deadline=None)
+    @given(rel(max_val=15, max_rows=60))
+    def test_lftj_matches_bruteforce(self, edges):
+        if not edges:
+            return
+        e = np.asarray(edges)
+        src, dst = e[:, 0], e[:, 1]
+        want = brute_force_count(src, dst)
+        a, b = orient_edges(src, dst)
+        ta = TrieArray.from_edges(a, b)
+        assert lftj_triangle_count(ta) == want
+
+    def test_triangle_listing_valid(self):
+        rng = np.random.default_rng(2)
+        src = rng.integers(0, 30, 300)
+        dst = rng.integers(0, 30, 300)
+        a, b = orient_edges(src, dst)
+        ta = TrieArray.from_edges(a, b)
+        out = []
+        lftj_triangle_count(ta, emit=out.append)
+        es = set(zip(a.tolist(), b.tolist()))
+        for (x, y, z) in out:
+            assert x < y < z
+            assert (x, y) in es and (x, z) in es and (y, z) in es
+        assert len(set(out)) == len(out)  # no duplicates
+
+
+class TestGenericQueries:
+    @settings(max_examples=20, deadline=None)
+    @given(rel(8, 30), rel(8, 30))
+    def test_two_way_join(self, r, s):
+        rels = {"R": TrieArray.from_tuples(np.asarray(r).reshape(-1, 2)),
+                "S": TrieArray.from_tuples(np.asarray(s).reshape(-1, 2))}
+        q = Query(("x", "y", "z"),
+                  [Atom("R", ("x", "y")), Atom("S", ("y", "z"))])
+        got = run_query(q, ["x", "y", "z"], rels)
+        rs = set(map(tuple, np.unique(np.asarray(r).reshape(-1, 2), axis=0)))
+        ss = set(map(tuple, np.unique(np.asarray(s).reshape(-1, 2), axis=0)))
+        want = sum(1 for (x, y) in rs for (y2, z) in ss if y2 == y)
+        assert got == want
+
+    @settings(max_examples=15, deadline=None)
+    @given(rel(6, 20), rel(6, 20))
+    def test_boxed_equals_inmemory(self, r, s):
+        rels = {"R": TrieArray.from_tuples(np.asarray(r).reshape(-1, 2)),
+                "S": TrieArray.from_tuples(np.asarray(s).reshape(-1, 2))}
+        q = Query(("x", "y", "z"),
+                  [Atom("R", ("x", "y")), Atom("S", ("y", "z"))])
+        full = run_query(q, ["x", "y", "z"], rels)
+        for mem in (16, 48, 200):
+            assert run_query(q, ["x", "y", "z"], rels, mem_words=mem) == full
+
+    def test_cross_product(self):
+        rels = {"A": TrieArray.from_tuples(np.arange(7).reshape(-1, 1)),
+                "B": TrieArray.from_tuples(np.arange(5).reshape(-1, 1))}
+        q = Query(("x", "y"), [Atom("A", ("x",)), Atom("B", ("y",))])
+        assert run_query(q, ["x", "y"], rels) == 35
+        assert run_query(q, ["x", "y"], rels, mem_words=6) == 35
+
+    def test_unary_intersection(self):
+        rels = {"A": TrieArray.from_tuples(np.arange(0, 40, 2).reshape(-1, 1)),
+                "B": TrieArray.from_tuples(np.arange(0, 40, 3).reshape(-1, 1))}
+        q = Query(("x",), [Atom("A", ("x",)), Atom("B", ("x",))])
+        assert run_query(q, ["x"], rels) == 7   # multiples of 6 in [0, 40)
+
+    def test_rank(self):
+        q = Query(("x", "y", "z"),
+                  [Atom("E", ("x", "y")), Atom("E2", ("x", "z")),
+                   Atom("E3", ("y", "z"))])
+        assert rank_for_order(q, ["x", "y", "z"]) == 2   # paper: r(Δ) = 2
+        r, _ = best_rank(q)
+        assert r == 2
+
+    def test_repeated_var_rejected(self):
+        with pytest.raises(ValueError):
+            Atom("R", ("x", "x"))

@@ -1,0 +1,92 @@
+"""Optimizer + gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw
+from repro.optim import compression as C
+
+
+class TestAdamW:
+    def test_converges_quadratic(self):
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+        target = jnp.asarray([[1.0], [-2.0], [0.5], [3.0]])
+        y = a @ target
+        cfg = adamw.AdamWConfig(lr=5e-2, weight_decay=0.0, warmup_steps=5,
+                                total_steps=400)
+        p = {"w": jnp.zeros((4, 1))}
+        o = adamw.init(p)
+
+        @jax.jit
+        def step(p, o):
+            g = jax.grad(lambda p: jnp.mean((a @ p["w"] - y) ** 2))(p)
+            return adamw.apply(cfg, p, g, o)
+
+        for _ in range(400):
+            p, o, m = step(p, o)
+        np.testing.assert_allclose(np.asarray(p["w"]), np.asarray(target),
+                                   atol=0.05)
+
+    def test_clip_global_norm(self):
+        g = {"a": jnp.full((10,), 100.0), "b": jnp.full((10,), -100.0)}
+        clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+        assert float(norm) > 400
+        cn = adamw.global_norm(clipped)
+        np.testing.assert_allclose(float(cn), 1.0, rtol=1e-4)
+
+    def test_schedule_shape(self):
+        cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                min_lr_ratio=0.1)
+        lrs = [float(adamw.schedule(cfg, jnp.int32(s))) for s in range(0, 101, 10)]
+        assert lrs[0] == 0.0
+        assert abs(lrs[1] - 1.0) < 1e-6          # end of warmup
+        assert lrs[-1] == pytest.approx(0.1, rel=1e-3)  # floor
+        assert all(a >= b - 1e-9 for a, b in zip(lrs[1:], lrs[2:]))
+
+    def test_bf16_params_updated_via_f32(self):
+        p = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+        g = {"w": jnp.full((4, 4), 1e-3, jnp.bfloat16)}
+        o = adamw.init(p)
+        assert o.m["w"].dtype == jnp.float32
+        p2, o2, _ = adamw.apply(adamw.AdamWConfig(clip_norm=1e9), p, g, o)
+        assert p2["w"].dtype == jnp.bfloat16
+        assert float(jnp.sum(jnp.abs(p2["w"].astype(jnp.float32)))) > 0
+
+
+class TestCompression:
+    def test_bf16_roundtrip_small_error(self):
+        rng = np.random.default_rng(1)
+        g = {"w": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)}
+        back = C.decompress_bf16(C.compress_bf16(g))
+        err = float(jnp.max(jnp.abs(back["w"] - g["w"])))
+        assert err < 0.02
+
+    def test_int8_error_feedback_accumulates(self):
+        """EF property: the same gradient applied repeatedly loses nothing
+        on average — residuals carry the rounding error forward."""
+        rng = np.random.default_rng(2)
+        g = {"w": jnp.asarray(rng.standard_normal((32, 32)) * 1e-3,
+                              jnp.float32)}
+        ef = C.init_error_feedback(g)
+        total = jnp.zeros_like(g["w"])
+        n = 50
+        for _ in range(n):
+            packed, ef = C.compress_int8_ef(g, ef)
+            total = total + C.decompress_int8(packed)["w"]
+        # mean transmitted ~= mean true gradient (error feedback closes gap)
+        np.testing.assert_allclose(np.asarray(total / n), np.asarray(g["w"]),
+                                   atol=2e-5)
+
+    def test_int8_single_shot_bounded_error(self):
+        g = {"w": jnp.asarray(np.linspace(-1, 1, 256), jnp.float32)}
+        ef = C.init_error_feedback(g)
+        packed, ef2 = C.compress_int8_ef(g, ef)
+        back = C.decompress_int8(packed)
+        err = float(jnp.max(jnp.abs(back["w"] - g["w"])))
+        assert err <= 1.0 / 127.0 + 1e-6
+        # residual equals the quantization error
+        np.testing.assert_allclose(np.asarray(ef2["w"]),
+                                   np.asarray(g["w"] - back["w"]), atol=1e-7)

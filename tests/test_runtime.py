@@ -1,0 +1,96 @@
+"""Fault tolerance: elastic re-meshing, straggler watchdog, box scheduler."""
+
+import numpy as np
+import pytest
+
+from repro.runtime.elastic import (DevicePool, ElasticState, MeshPlan,
+                                   accum_steps_for, plan_mesh)
+from repro.runtime.straggler import (BoxScheduler, StepTimeWatchdog,
+                                     fail_worker)
+
+
+class TestElastic:
+    def test_plan_preserves_model_axis(self):
+        plan = plan_mesh(256, model_parallel=16)
+        assert plan.model == 16 and plan.data == 16
+
+    def test_plan_after_failure_shrinks_pow2(self):
+        plan = plan_mesh(255, model_parallel=16)
+        assert plan.model == 16 and plan.data == 8   # 255//16=15 -> pow2 8
+
+    def test_infeasible(self):
+        assert plan_mesh(8, model_parallel=16) is None
+
+    def test_failure_recovery_cycle(self):
+        pool = DevicePool(n_hosts=64, devices_per_host=4)   # 256 devices
+        st = ElasticState(pool, model_parallel=16, global_batch=256)
+        assert st.plan.data == 16
+        st.on_failure(3)
+        assert st.plan.data == 8          # 252 alive -> 15 -> pow2 8
+        assert st.generation == 1
+        st.on_recovery(3)
+        assert st.plan.data == 16
+
+    def test_global_batch_invariance(self):
+        """Elastic semantics: dp-size changes rescale accumulation, the
+        global batch never changes."""
+        for n_data in (16, 8, 4):
+            plan = MeshPlan(data=n_data, model=16)
+            acc = accum_steps_for(256, plan, per_device_batch=2)
+            assert acc * plan.data * 2 >= 256
+            assert (acc - 1) * plan.data * 2 < 256
+
+
+class TestWatchdog:
+    def test_flags_outlier(self):
+        wd = StepTimeWatchdog(min_samples=4, threshold=2.0)
+        flags = [wd.record(1.0) for _ in range(8)]
+        assert not any(flags)
+        assert wd.record(5.0) is True
+        assert wd.record(1.0) is False
+
+    def test_adapts_to_drift(self):
+        wd = StepTimeWatchdog(window=8, min_samples=4, threshold=2.5)
+        for t in np.linspace(1.0, 2.0, 16):
+            wd.record(float(t))   # slow drift should not flag
+        assert len(wd.flagged) == 0
+
+
+class TestBoxScheduler:
+    def test_all_boxes_complete(self):
+        sched = BoxScheduler(range(20), n_workers=4)
+        while not sched.all_done():
+            for w in range(4):
+                t = sched.next_for(w, now=0.0)
+                if t:
+                    sched.complete(w, t.box_id, t.payload * 2)
+        assert sched.results() == [i * 2 for i in range(20)]
+
+    def test_worker_failure_requeues(self):
+        sched = BoxScheduler(range(6), n_workers=2)
+        t0 = sched.next_for(0, now=0.0)
+        t1 = sched.next_for(0, now=0.0)
+        n = fail_worker(sched, 0)
+        assert n == 2
+        # worker 1 finishes everything, including the re-queued boxes
+        while not sched.all_done():
+            t = sched.next_for(1, now=0.0)
+            assert t is not None
+            sched.complete(1, t.box_id, 0)
+        assert sched.all_done()
+
+    def test_steal_from_straggler(self):
+        sched = BoxScheduler(range(2), n_workers=2, steal_after_s=10.0)
+        t0 = sched.next_for(0, now=0.0)     # worker 0 takes box, stalls
+        t1 = sched.next_for(1, now=0.0)
+        sched.complete(1, t1.box_id, "r1")
+        # before timeout: nothing to steal
+        assert sched.next_for(1, now=5.0) is None
+        # after timeout: worker 1 steals worker 0's box
+        stolen = sched.next_for(1, now=20.0)
+        assert stolen is not None and stolen.box_id == t0.box_id
+        assert sched.duplicates == 1
+        assert sched.complete(1, stolen.box_id, "r-stolen") is True
+        # the straggler finally finishes: idempotent, first result kept
+        assert sched.complete(0, t0.box_id, "r-late") is False
+        assert sched.tasks[t0.box_id].result == "r-stolen"

@@ -1,0 +1,122 @@
+"""TrieArray structure: build, enumerate, slice, probe (unit + property)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SPILL, TrieArray
+
+
+def rows(draw_arity=2, max_val=20, max_rows=60):
+    return st.lists(
+        st.tuples(*[st.integers(0, max_val)] * draw_arity),
+        min_size=0, max_size=max_rows)
+
+
+def canon(tuples, arity):
+    if not tuples:
+        return np.zeros((0, arity), dtype=np.int64)
+    return np.unique(np.asarray(sorted(tuples), dtype=np.int64), axis=0)
+
+
+class TestBuild:
+    def test_paper_figure1(self):
+        # ternary relation of paper Fig. 1
+        tuples = [(a, b, c) for a, bs in
+                  [(1, [(1, [3, 4, 5])]),
+                   (2, [(1, [1]), (3, [8, 9])])]
+                  for (b, cs) in bs for c in cs]
+        ta = TrieArray.from_tuples(np.asarray(tuples))
+        assert ta.arity == 3
+        np.testing.assert_array_equal(ta.val[0], [1, 2])
+        np.testing.assert_array_equal(ta.val[1], [1, 1, 3])
+        np.testing.assert_array_equal(ta.val[2], [3, 4, 5, 1, 8, 9])
+        np.testing.assert_array_equal(ta.to_tuples(), np.asarray(tuples))
+
+    def test_empty(self):
+        ta = TrieArray.from_tuples(np.zeros((0, 2), dtype=np.int64))
+        assert ta.n_tuples() == 0
+        assert ta.to_tuples().shape == (0, 2)
+
+    @settings(max_examples=30, deadline=None)
+    @given(rows(2))
+    def test_roundtrip_binary(self, tuples):
+        want = canon(tuples, 2)
+        ta = TrieArray.from_tuples(want.reshape(-1, 2))
+        got = ta.to_tuples()
+        np.testing.assert_array_equal(got, want.reshape(-1, 2))
+
+    @settings(max_examples=20, deadline=None)
+    @given(rows(3, max_val=8, max_rows=40))
+    def test_roundtrip_ternary(self, tuples):
+        want = canon(tuples, 3)
+        ta = TrieArray.from_tuples(want.reshape(-1, 3))
+        np.testing.assert_array_equal(ta.to_tuples(), want.reshape(-1, 3))
+
+    def test_words_linear(self):
+        rng = np.random.default_rng(0)
+        t = rng.integers(0, 50, (200, 2))
+        ta = TrieArray.from_tuples(t)
+        # words <= values + index overhead (Prop. 3: O(|R|))
+        assert ta.words() <= 3 * ta.n_tuples() + len(ta.val[0]) + 2
+
+
+class TestSlice:
+    @settings(max_examples=30, deadline=None)
+    @given(rows(2), st.integers(0, 20), st.integers(0, 20))
+    def test_slice_semantics(self, tuples, l, h):
+        """Def. 6: slice == { t | l <= t[0] <= h }."""
+        want_all = canon(tuples, 2).reshape(-1, 2)
+        ta = TrieArray.from_tuples(want_all)
+        s = ta.make_slice((), l, h)
+        want = want_all[(want_all[:, 0] >= l) & (want_all[:, 0] <= h)]
+        np.testing.assert_array_equal(s.to_tuples(), want)
+        assert s.words_loaded == s.words() or len(want) == 0
+
+    @settings(max_examples=20, deadline=None)
+    @given(rows(3, max_val=6, max_rows=40), st.integers(0, 6),
+           st.integers(0, 6), st.integers(0, 6))
+    def test_slice_level1(self, tuples, pre, l, h):
+        """Slice at level 1 with prefix (pre,)."""
+        want_all = canon(tuples, 3).reshape(-1, 3)
+        ta = TrieArray.from_tuples(want_all)
+        s = ta.make_slice((pre,), l, h)
+        want = want_all[(want_all[:, 0] == pre) &
+                        (want_all[:, 1] >= l) & (want_all[:, 1] <= h)][:, 1:]
+        np.testing.assert_array_equal(s.to_tuples(), want)
+
+    def test_nested_slice(self):
+        """Slices of slices re-base index offsets correctly."""
+        rng = np.random.default_rng(1)
+        t = np.unique(rng.integers(0, 12, (80, 2)), axis=0)
+        ta = TrieArray.from_tuples(t)
+        s1 = ta.make_slice((), 2, 9)
+        s2 = s1.make_slice((), 4, 7)
+        want = t[(t[:, 0] >= 4) & (t[:, 0] <= 7)]
+        np.testing.assert_array_equal(s2.to_tuples(), want)
+
+
+class TestProbe:
+    @settings(max_examples=30, deadline=None)
+    @given(rows(2, max_val=15, max_rows=50), st.integers(0, 15),
+           st.integers(2, 60))
+    def test_probe_maximality(self, tuples, l, budget):
+        """Prop. 8: probe returns the max h whose slice fits the budget."""
+        want = canon(tuples, 2).reshape(-1, 2)
+        ta = TrieArray.from_tuples(want)
+        res, w = ta.probe((), l, budget)
+        vals = np.unique(want[want[:, 0] >= l][:, 0])
+        if len(vals) == 0:
+            assert res == np.inf
+            return
+        if res == SPILL:
+            assert ta.slice_words((), vals[0], vals[0]) > budget
+            return
+        assert w <= budget
+        if res != np.inf:
+            assert ta.slice_words((), vals[0], int(res)) <= budget
+            nxt = vals[vals > res]
+            if len(nxt):
+                assert ta.slice_words((), vals[0], int(nxt[0])) > budget
+        else:
+            assert ta.slice_words((), vals[0], int(vals[-1])) <= budget
