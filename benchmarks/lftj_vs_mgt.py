@@ -13,9 +13,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (BlockDevice, TrieArray, boxed_triangle_count,
-                        count_triangles, mgt_triangle_count, orient_edges,
-                        triangle_count_boxed_vectorized)
+from repro.core import (BlockDevice, TriangleEngine, TrieArray,
+                        boxed_triangle_count, count_triangles,
+                        mgt_triangle_count, orient_edges)
 from repro.data.graphs import random_graph, rmat_graph
 
 from .common import emit, timeit
@@ -50,12 +50,15 @@ def main(fast: bool = False) -> None:
             us_l = timeit(lambda: boxed_triangle_count(ta, mem)[0], repeats=1)
             emit(f"fig11_lftj_seq/{gname}/m{int(frac*100)}", us_l,
                  f"io={dev2.stats.block_reads};count={cnt_l}")
-            # boxed LFTJ, vectorized per-box engine ("parallel" analogue)
-            us_v = timeit(lambda: triangle_count_boxed_vectorized(
-                src, dst, mem)[0], repeats=1)
-            cnt_v, vinfo = triangle_count_boxed_vectorized(src, dst, mem)
-            emit(f"fig11_lftj_vec/{gname}/m{int(frac*100)}", us_v,
-                 f"count={cnt_v};boxes={vinfo['n_boxes']};"
+            # boxed LFTJ via the unified engine (box sharding engages on
+            # multi-device hosts; backend dispatch per box density)
+            eng = TriangleEngine(src, dst, mem_words=mem)
+            us_v = timeit(lambda: eng.count(), repeats=1)
+            cnt_v = eng.count()
+            emit(f"fig11_lftj_engine/{gname}/m{int(frac*100)}", us_v,
+                 f"count={cnt_v};boxes={eng.stats.n_boxes};"
+                 f"dense={eng.stats.n_dense_boxes};"
+                 f"shards={eng.stats.n_shards};"
                  f"ratio_vs_mgt={us_v/max(1e-9,us_m):.2f}")
             assert cnt_m == cnt_l == cnt_v
 

@@ -8,7 +8,9 @@
   roofline per-cell roofline terms from dry-run (benchmarks.roofline)
 
 Prints ``name,us_per_call,derived`` CSV. ``--fast`` shrinks sizes;
-``--only fig9`` runs a single suite.
+``--only fig9`` runs a single suite; ``--smoke`` is the CI gate — the
+cheapest suite subset at fast sizes, exercising the engine + I/O model
+end to end.
 """
 
 from __future__ import annotations
@@ -22,7 +24,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke pass: fig9 + fig11 at --fast sizes")
     args = ap.parse_args()
+    if args.smoke:
+        args.fast = True
 
     from . import (arboricity_scaling, boxing_overhead, kernel_bench,
                    lftj_vs_mgt, roofline, vanilla_vs_boxed)
@@ -35,7 +41,12 @@ def main() -> None:
         "kernels": kernel_bench.main,
         "roofline": roofline.main,
     }
-    names = [args.only] if args.only else list(suites)
+    if args.only:
+        names = [args.only]
+    elif args.smoke:
+        names = ["fig9", "fig11"]
+    else:
+        names = list(suites)
     print("name,us_per_call,derived")
     for n in names:
         t0 = time.time()

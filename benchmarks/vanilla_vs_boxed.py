@@ -15,8 +15,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (BlockDevice, TrieArray, adversarial_graph,
-                        boxed_triangle_count, count_triangles, orient_edges)
+from repro.core import (BlockDevice, TriangleEngine, TrieArray,
+                        adversarial_graph, boxed_triangle_count,
+                        count_triangles, orient_edges)
 from repro.data.graphs import random_graph, rmat_graph
 
 from .common import emit, timeit
@@ -61,6 +62,15 @@ def main(fast: bool = False) -> None:
             emit(f"fig9/{gname}/m{int(frac*100)}", 0.0,
                  f"vanilla={van};boxed={box};ratio={van/max(1,box):.2f};"
                  f"thm13_bound={bound:.0f};boxes={st.n_boxes}")
+            # wall-clock of the same budget through the unified engine
+            # (in-memory execution of the identical box plan)
+            a2, b2 = orient_edges(s, d)
+            m = max(B * 4, int(TrieArray.from_edges(a2, b2).words() * frac))
+            eng = TriangleEngine(s, d, mem_words=m)
+            us_e = timeit(lambda: eng.count(), repeats=1)
+            emit(f"fig9_engine/{gname}/m{int(frac*100)}", us_e,
+                 f"count={eng.count()};boxes={eng.stats.n_boxes};"
+                 f"dense={eng.stats.n_dense_boxes}")
 
 
 if __name__ == "__main__":

@@ -19,8 +19,8 @@ import time
 
 import numpy as np
 
-from repro.core import TrieArray, count_triangles, orient_edges, plan_boxes
-from repro.core.lftj_jax import _count_chunked, csr_from_edges, pad_neighbors
+from repro.core import TriangleEngine
+from repro.core.lftj_jax import _count_chunked
 from repro.data.graphs import rmat_graph
 from repro.runtime.straggler import BoxScheduler, fail_worker
 
@@ -35,30 +35,23 @@ def main():
 
     t0 = time.time()
     src, dst = rmat_graph(args.nodes, args.edges, seed=0)
-    a, b = orient_edges(src, dst)
-    ta = TrieArray.from_edges(a, b)
-    print(f"[ingest] {len(a)} edges -> TrieArray {ta.words()} words "
+    eng = TriangleEngine(src, dst, shard=False)  # scheduler plays the mesh
+    a, b = eng.a, eng.b
+    print(f"[ingest] {len(a)} edges -> CSR over {eng.nv} nodes "
           f"({time.time()-t0:.1f}s)")
 
-    mem = int(ta.words() * args.mem_frac)
-    boxes = plan_boxes(ta, mem)
+    eng.mem_words = int((len(a) * 2 + eng.nv) * args.mem_frac)
+    boxes = eng.plan()
     print(f"[plan]   {len(boxes)} boxes @ {args.mem_frac:.0%} memory budget")
 
-    indptr, indices = csr_from_edges(a, b)
     import jax.numpy as jnp
-    npad = jnp.asarray(pad_neighbors(indptr, indices))
-    per_node = np.zeros(len(indptr) - 1, np.int64)
 
     def solve(box):
-        lx, hx, ly, hy = box
-        lx_, hx_ = max(lx, 0), min(hx, len(indptr) - 2)
-        eu = np.repeat(np.arange(lx_, hx_ + 1), np.diff(indptr[lx_:hx_ + 2]))
-        ev = indices[indptr[lx_]:indptr[hx_ + 1]].astype(np.int64)
-        sel = (ev >= ly) & (ev <= hy)
-        if not sel.any():
+        eu, ev, _, _ = eng._box_edges(box)
+        if len(eu) == 0:
             return 0
-        return int(_count_chunked(npad, jnp.asarray(eu[sel], jnp.int32),
-                                  jnp.asarray(ev[sel], jnp.int32), chunk=1024))
+        return int(_count_chunked(eng.npad, jnp.asarray(eu, jnp.int32),
+                                  jnp.asarray(ev, jnp.int32), chunk=1024))
 
     sched = BoxScheduler(boxes, n_workers=args.workers, steal_after_s=0.0)
     # chaos: worker 0 grabs work and dies
@@ -75,17 +68,15 @@ def main():
           f"{args.workers - 1} surviving workers "
           f"(1 worker killed, {n_requeued} boxes re-queued, "
           f"{sched.duplicates} steals)")
-    check = count_triangles(src, dst, method="vectorized")
+    check = eng.count()  # same engine, in-process (sharded if multi-device)
     assert total == check, (total, check)
-    print(f"[verify] matches single-shot vectorized count: {check}")
+    print(f"[verify] matches TriangleEngine.count(): {check} "
+          f"({eng.stats.n_dense_boxes}/{eng.stats.n_boxes} dense boxes, "
+          f"{eng.stats.n_shards} shard(s))")
 
-    # clustering-coefficient features -> GCN (shared CSR substrate)
-    deg = np.bincount(np.concatenate([a, b]), minlength=len(indptr) - 1)
-    pos = jnp.clip(jnp.asarray(npad) != np.iinfo(np.int32).max, 0, 1)
-    tri_per_node = np.zeros(len(indptr) - 1)
-    # per-edge counts attributed to the smaller endpoint (cheap proxy)
-    denom = np.maximum(deg * (deg - 1) / 2, 1)
-    cc = np.minimum(total * 3 / max(1, len(a)), 1.0) * np.ones_like(denom)
+    # degree + global clustering features -> GCN (shared CSR substrate)
+    deg = np.bincount(np.concatenate([a, b]), minlength=eng.nv)
+    cc = np.minimum(total * 3 / max(1, len(a)), 1.0) * np.ones(eng.nv)
     feats = np.stack([deg / max(1, deg.max()), cc,
                       np.log1p(deg)], 1).astype(np.float32)
 

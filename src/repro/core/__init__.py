@@ -7,8 +7,10 @@ from .boxing import (BoxedLFTJ, BoxingConfig, BoxStats, boxed_triangle_count,
                      plan_boxes)
 from .iomodel import BlockDevice, CountingReader, IOStats
 from .lftj_jax import (csr_from_edges, orient_edges, pad_neighbors,
-                       triangle_count_boxed_vectorized, triangle_count_dense,
-                       triangle_count_vectorized)
+                       pad_neighbors_binned, triangle_count_boxed_vectorized,
+                       triangle_count_dense, triangle_count_vectorized)
+from .engine import (EngineStats, TriangleEngine, engine_count, engine_list,
+                     measure_dense_crossover)
 from .mgt import mgt_triangle_count
 from .queries import Query, best_rank, build_indexes, rank_for_order, run_query
 from .triangle import brute_force_count, count_triangles, list_triangles
@@ -24,4 +26,6 @@ __all__ = [
     "triangle_count_vectorized", "mgt_triangle_count", "Query", "best_rank",
     "build_indexes", "rank_for_order", "run_query", "brute_force_count",
     "count_triangles", "list_triangles", "adversarial_graph",
+    "pad_neighbors_binned", "EngineStats", "TriangleEngine", "engine_count",
+    "engine_list", "measure_dense_crossover",
 ]

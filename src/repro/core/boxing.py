@@ -305,12 +305,15 @@ class BoxedLFTJ:
 
 
 def plan_boxes(edges_ta: TrieArray, mem_words: int,
-               ratio_xy: float = 4.0) -> list:
+               ratio_xy: float = 4.0, monotone_prune: bool = True) -> list:
     """Triangle-query box plan [(lx,hx,ly,hy)] without running LFTJ.
 
     This is the host-side planner the distributed triangle engine shards over
     devices: boxes are independent work items (§3.3: the partitioning is
-    overlap-free).
+    overlap-free). ``monotone_prune`` drops boxes with hy < lx, which is
+    sound only when every oriented edge has x < y numerically (the minmax
+    orientation); pass False for orientations that break that invariant
+    (e.g. 'degree').
     """
     boxes = []
     n_max = np.iinfo(np.int64).max
@@ -335,7 +338,7 @@ def plan_boxes(edges_ta: TrieArray, mem_words: int,
             if fy is None:
                 break
             hy_i = n_max if hy in (INF, np.inf) else int(hy)
-            if hy_i >= lx:  # monotone pruning: need y >= x somewhere in box
+            if hy_i >= lx or not monotone_prune:
                 boxes.append((lx, hx_i, ly, hy_i))
             if hy_i == n_max:
                 break

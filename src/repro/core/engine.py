@@ -1,0 +1,482 @@
+"""TriangleEngine: the unified execution facade for triangle listing/counting.
+
+Ties together every piece the repo already had but never connected:
+
+  * ``core.boxing.plan_boxes``   — the paper's probe/provision box planner
+    (§3, Alg. 2) producing overlap-free (x-range, y-range) work items that
+    fit the memory budget;
+  * backend dispatch per box      — vectorized binary-search intersection
+    (``lftj_jax._count_chunked``), the dense MXU formulation
+    Σ mask ⊙ (Ax Ayᵀ) (``kernels.triangle_dense``), or the Pallas rotation
+    kernel (``kernels.intersect``), chosen by box edge density against a
+    (optionally measured) crossover;
+  * box sharding                  — the "Boxes" rule of
+    ``repro.parallel.sharding``: a greedy size-balanced (LPT) schedule of
+    boxes over a 1-D ``"boxes"`` device mesh executed with ``shard_map``
+    (boxes are independent by construction, §3.3, so this is pure data
+    parallelism — the paper's "alleviated by parallelization" claim);
+  * listing, not just counting    — enumeration into a bounded per-shard
+    output buffer with exact total counts, so overflow is detected and
+    resolved by a rescan at doubled capacity;
+  * degree-binned padding         — ``pad_neighbors_binned`` caps the
+    O(V·K_max) padding waste of a single hub row on skewed graphs.
+
+Usage::
+
+    eng = TriangleEngine(src, dst, mem_words=1 << 16)
+    n   = eng.count()
+    tri = eng.list()          # (n, 3) canonical (min, mid, max) rows
+    eng.stats                 # boxes, backends, shards, rescans
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import lru_cache, partial
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (balanced_box_schedule, box_mesh,
+                                     shard_box_edges)
+
+from .lftj_jax import (SENTINEL, _count_chunked, _count_rows_chunked,
+                       _list_chunked, _row_intersect_count, csr_from_edges,
+                       orient_edges, pad_neighbors, pad_neighbors_binned)
+
+BACKENDS = ("auto", "binary", "dense", "pallas")
+
+# dense-path feasibility guard: (wx + wy) · V one-hot words per box
+_DENSE_WORDS_CAP = 64_000_000
+
+
+@dataclass
+class EngineStats:
+    """What one ``count()`` / ``list()`` call actually executed."""
+
+    n_boxes: int = 0
+    n_dense_boxes: int = 0
+    n_binary_boxes: int = 0
+    n_pallas_boxes: int = 0
+    n_shards: int = 1
+    n_rescans: int = 0
+    dense_threshold: float = 0.0
+    shard_edges: List[int] = field(default_factory=list)
+
+    def as_info(self) -> dict:
+        """Legacy info dict (triangle_count_boxed_vectorized compat)."""
+        return {"n_boxes": self.n_boxes, "n_dense_boxes": self.n_dense_boxes,
+                "n_shards": self.n_shards, "n_rescans": self.n_rescans}
+
+
+# ---------------------------------------------------------------------------
+# measured density crossover (binary-search vs dense MXU formulation)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=4)
+def measure_dense_crossover(nv: int = 256, repeats: int = 3,
+                            seed: int = 0) -> float:
+    """Time both backends on synthetic boxes of rising density and return
+    the lowest density where the dense formulation wins.
+
+    Cached per process: the crossover is a property of the backend/hardware,
+    not of the input graph. Falls back to 1.0 (never dense) only if dense
+    never wins on the sampled grid.
+    """
+    rng = np.random.default_rng(seed)
+    densities = (0.01, 0.02, 0.05, 0.10, 0.20, 0.40)
+    crossover = 1.0
+    for d in densities:
+        adj = np.triu(rng.random((nv, nv)) < d, k=1)
+        src, dst = np.nonzero(adj)
+        if len(src) == 0:
+            continue
+        indptr, indices = csr_from_edges(src, dst, n_nodes=nv)
+        npad = jnp.asarray(pad_neighbors(indptr, indices))
+        eu = jnp.asarray(src, jnp.int32)
+        ev = jnp.asarray(dst, jnp.int32)
+        a = jnp.asarray(adj, jnp.float32)
+
+        def t_binary():
+            _count_chunked(npad, eu, ev, chunk=2048).block_until_ready()
+
+        def t_dense():
+            jnp.sum(a * (a @ a.T)).block_until_ready()
+
+        t_binary(); t_dense()  # compile outside the timed region
+        tb = min(_time(t_binary) for _ in range(repeats))
+        td = min(_time(t_dense) for _ in range(repeats))
+        if td < tb:
+            crossover = d
+            break
+    return crossover
+
+
+def _time(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class TriangleEngine:
+    """Unified boxed/sharded triangle counting + listing over one graph.
+
+    Parameters
+    ----------
+    src, dst : undirected edge endpoints (host numpy).
+    mem_words : memory budget for the box planner; ``None`` = one box.
+    orientation : 'minmax' (paper §2.3) or 'degree' (√|E| out-degree cap).
+    backend : 'auto' (density dispatch), or force 'binary' / 'dense' /
+        'pallas' for every box.
+    dense_threshold : box edge-density above which 'auto' picks the dense
+        MXU formulation; the string 'measured' times both backends once per
+        process (``measure_dense_crossover``) and uses the result.
+    degree_bins : bin vertices by degree (power-of-4 widths) so padding is
+        per-bin instead of global K = max degree (skewed graphs).
+    devices : devices for box sharding; default ``jax.devices()``. Sharding
+        engages whenever more than one device is available (or
+        ``shard=True`` forces the shard_map path on a single device).
+    chunk : edge-chunk length of the scan (peak memory O(chunk · K)).
+    use_pallas_kernels : run kernels compiled (TPU) vs interpret; default
+        only compiles on TPU.
+    """
+
+    def __init__(self, src: np.ndarray, dst: np.ndarray, *,
+                 mem_words: Optional[int] = None,
+                 orientation: str = "minmax",
+                 backend: str = "auto",
+                 dense_threshold=0.05,
+                 degree_bins: bool = False,
+                 devices: Optional[Sequence] = None,
+                 shard: str | bool = "auto",
+                 chunk: int = 2048,
+                 use_pallas_kernels: Optional[bool] = None):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+        self.orientation = orientation
+        self.backend = backend
+        self.degree_bins = degree_bins
+        self.chunk = int(chunk)
+        self.mem_words = mem_words
+        if use_pallas_kernels is None:
+            use_pallas_kernels = jax.default_backend() == "tpu"
+        self.use_pallas_kernels = bool(use_pallas_kernels)
+
+        self.devices = list(jax.devices()) if devices is None else list(devices)
+        if shard == "auto":
+            self.shard = len(self.devices) > 1
+        else:
+            self.shard = bool(shard)
+
+        if dense_threshold == "measured":
+            dense_threshold = measure_dense_crossover()
+        self.dense_threshold = float(dense_threshold)
+
+        a, b = orient_edges(np.asarray(src), np.asarray(dst), orientation)
+        self.a, self.b = a, b
+        self.nv = int(max(a.max(initial=-1), b.max(initial=-1))) + 1
+        self.indptr, self.indices = csr_from_edges(a, b, n_nodes=self.nv) \
+            if self.nv else (np.zeros(1, np.int64), np.zeros(0, np.int32))
+        self._npad = None
+        self._npad_host = None
+        self._bins = None
+        self._plan_cache: Optional[Tuple[Optional[int], list]] = None
+        self.stats = EngineStats(dense_threshold=self.dense_threshold)
+
+    # -- lazy derived state --------------------------------------------------
+
+    @property
+    def npad_host(self) -> np.ndarray:
+        if self._npad_host is None:
+            self._npad_host = pad_neighbors(self.indptr, self.indices)
+        return self._npad_host
+
+    @property
+    def npad(self) -> jnp.ndarray:
+        if self._npad is None:
+            self._npad = jnp.asarray(self.npad_host)
+        return self._npad
+
+    @property
+    def bins(self):
+        if self._bins is None:
+            self._bins = pad_neighbors_binned(self.indptr, self.indices)
+        return self._bins
+
+    # -- box planning ---------------------------------------------------------
+
+    def plan(self) -> List[Tuple[int, int, int, int]]:
+        """Box plan [(lx, hx, ly, hy)]; one unbounded box without a budget.
+
+        Cached per ``mem_words`` — the TrieArray build + probe/provision
+        pass is the expensive host-side step and the plan is deterministic.
+        """
+        if self._plan_cache is not None \
+                and self._plan_cache[0] == self.mem_words:
+            return self._plan_cache[1]
+        boxes = self._plan_uncached()
+        self._plan_cache = (self.mem_words, boxes)
+        return boxes
+
+    def _plan_uncached(self) -> List[Tuple[int, int, int, int]]:
+        if len(self.a) == 0:
+            return []
+        if self.mem_words is None:
+            return [(0, self.nv - 1, 0, self.nv - 1)]
+        from .boxing import plan_boxes
+        from .triearray import TrieArray
+        ta = TrieArray.from_edges(self.a, self.b)
+        if ta.words() <= self.mem_words:
+            return [(0, self.nv - 1, 0, self.nv - 1)]
+        # hy < lx pruning is only sound when every edge has x < y (minmax)
+        return plan_boxes(ta, self.mem_words,
+                          monotone_prune=self.orientation == "minmax")
+
+    def _box_edges(self, box) -> Tuple[np.ndarray, np.ndarray, int, int]:
+        """In-box oriented edges (x ∈ [lx,hx], y ∈ [ly,hy]) + box widths."""
+        lx, hx, ly, hy = box
+        lx_, hx_ = max(lx, 0), min(hx, self.nv - 1)
+        ly_, hy_ = max(ly, 0), min(hy, self.nv - 1)
+        if hx_ < lx_ or hy_ < ly_:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64), 0, 0
+        s0, s1 = self.indptr[lx_], self.indptr[hx_ + 1]
+        eu = np.repeat(np.arange(lx_, hx_ + 1),
+                       np.diff(self.indptr[lx_:hx_ + 2]))
+        ev = self.indices[s0:s1].astype(np.int64)
+        sel = (ev >= ly_) & (ev <= hy_)
+        return eu[sel], ev[sel], hx_ - lx_ + 1, hy_ - ly_ + 1
+
+    def _pick_backend(self, n_edges: int, wx: int, wy: int) -> str:
+        if self.backend != "auto":
+            return self.backend
+        density = n_edges / max(1, wx * wy)
+        if density > self.dense_threshold \
+                and (wx + wy) * self.nv <= _DENSE_WORDS_CAP:
+            return "dense"
+        return "binary"
+
+    # -- counting -------------------------------------------------------------
+
+    def count(self) -> int:
+        boxes = self.plan()
+        self.stats = EngineStats(dense_threshold=self.dense_threshold,
+                                 n_boxes=len(boxes))
+        sparse: List[Tuple[np.ndarray, np.ndarray]] = []
+        total = 0
+        for box in boxes:
+            eu, ev, wx, wy = self._box_edges(box)
+            if len(eu) == 0:
+                continue
+            be = self._pick_backend(len(eu), wx, wy)
+            if be == "dense":
+                total += self._count_dense_box(box, eu, ev, wx, wy)
+                self.stats.n_dense_boxes += 1
+            elif be == "pallas":
+                total += self._count_pallas_box(eu, ev)
+                self.stats.n_pallas_boxes += 1
+            else:
+                sparse.append((eu, ev))
+                self.stats.n_binary_boxes += 1
+        if sparse:
+            if self.shard:
+                total += self._count_sharded(sparse)
+            else:
+                # boxes hold disjoint edge sets and counting is additive, so
+                # a single chunked scan over the concatenation beats per-box
+                # dispatch (one compile, one device round-trip)
+                eu = np.concatenate([e for e, _ in sparse])
+                ev = np.concatenate([e for _, e in sparse])
+                if self.degree_bins:
+                    total += self._count_binned(eu, ev)
+                else:
+                    total += int(_count_chunked(
+                        self.npad, jnp.asarray(eu, jnp.int32),
+                        jnp.asarray(ev, jnp.int32), chunk=self.chunk))
+        return total
+
+    # dense MXU formulation: z spans the full node range inside a box, so
+    # the x-rows / y-rows carry all V columns and count = Σ mask ⊙ (Ax Ayᵀ)
+    def _count_dense_box(self, box, eu, ev, wx, wy) -> int:
+        from repro.kernels.triangle_dense.ops import triangle_count
+        lx_, ly_ = max(box[0], 0), max(box[2], 0)
+        hx_, hy_ = lx_ + wx - 1, ly_ + wy - 1
+        ax = np.zeros((wx, self.nv), dtype=np.float32)
+        ay = np.zeros((wy, self.nv), dtype=np.float32)
+        s0, s1 = self.indptr[lx_], self.indptr[hx_ + 1]
+        ru = np.repeat(np.arange(lx_, hx_ + 1),
+                       np.diff(self.indptr[lx_:hx_ + 2]))
+        ax[ru - lx_, self.indices[s0:s1]] = 1.0
+        t0, t1 = self.indptr[ly_], self.indptr[hy_ + 1]
+        rv = np.repeat(np.arange(ly_, hy_ + 1),
+                       np.diff(self.indptr[ly_:hy_ + 2]))
+        ay[rv - ly_, self.indices[t0:t1]] = 1.0
+        mask = np.zeros((wx, wy), dtype=np.float32)
+        mask[eu - lx_, ev - ly_] = 1.0
+        if self.use_pallas_kernels:  # MXU tiling pays off on real hardware
+            return int(triangle_count(ax, ay, mask, use_pallas=True))
+        # host fallback: a plain BLAS matmul beats per-box-shape XLA compiles
+        return int((mask * (ax @ ay.T)).sum())
+
+    def _count_pallas_box(self, eu, ev) -> int:
+        from repro.kernels.intersect.ops import intersect_count
+        npad_np = self.npad_host
+        out = intersect_count(npad_np[eu], npad_np[ev], use_pallas=True,
+                              interpret=not self.use_pallas_kernels)
+        return int(jnp.sum(out))
+
+    def _count_binned(self, eu, ev) -> int:
+        """Degree-binned count: gather per (bin_u, bin_v) pair, probe the
+        narrower rows into the wider. Padding waste is per-bin K, not
+        global max degree."""
+        row_bin, bins = self.bins
+        bin_pos = np.zeros(self.nv, dtype=np.int64)
+        for rows, _ in bins:
+            bin_pos[rows] = np.arange(len(rows))
+        bu = row_bin[eu]
+        bv = row_bin[ev]
+        total = 0
+        live = bv >= 0  # sink y-endpoints (out-degree 0) intersect empty
+        for i, (_, npad_i) in enumerate(bins):
+            for j, (_, npad_j) in enumerate(bins):
+                sel = live & (bu == i) & (bv == j)
+                if not sel.any():
+                    continue
+                a_rows = jnp.asarray(npad_i[bin_pos[eu[sel]]])
+                b_rows = jnp.asarray(npad_j[bin_pos[ev[sel]]])
+                total += int(_count_rows_chunked(a_rows, b_rows,
+                                                 chunk=self.chunk))
+        return total
+
+    # -- sharded execution (the "Boxes" sharding rule) -------------------------
+
+    def _schedule(self, edge_lists) -> list:
+        return balanced_box_schedule([len(eu) for eu, _ in edge_lists],
+                                     len(self.devices))
+
+    def _count_sharded(self, edge_lists) -> int:
+        mesh = box_mesh(self.devices)
+        schedule = self._schedule(edge_lists)
+        eu_s, ev_s, ok_s = shard_box_edges(edge_lists, schedule,
+                                           pad_multiple=self.chunk)
+        self.stats.n_shards = len(self.devices)
+        self.stats.shard_edges = [int(x) for x in ok_s.sum(axis=1)]
+        chunk = self.chunk
+
+        @jax.jit
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P(None, None), P("boxes", None),
+                           P("boxes", None), P("boxes", None)),
+                 out_specs=P("boxes"), check_rep=False)
+        def run(npad, eu, ev, ok):
+            n_chunks = eu.shape[1] // chunk
+
+            def body(carry, inp):
+                u, v, valid = inp
+                cnt = jax.vmap(_row_intersect_count)(npad[u], npad[v])
+                return carry + jnp.sum(cnt * valid), None
+
+            total, _ = jax.lax.scan(
+                body, jnp.int32(0),
+                (eu.reshape(n_chunks, chunk), ev.reshape(n_chunks, chunk),
+                 ok.reshape(n_chunks, chunk)))
+            return total.reshape(1)
+
+        parts = run(self.npad, jnp.asarray(eu_s), jnp.asarray(ev_s),
+                    jnp.asarray(ok_s))
+        return int(jnp.sum(parts))
+
+    # -- listing --------------------------------------------------------------
+
+    def list(self, capacity: Optional[int] = None) -> np.ndarray:
+        """Enumerate all triangles; returns canonical sorted (m, 3) rows.
+
+        The output buffer is bounded (``capacity`` triangles per shard);
+        because the kernels return the *exact* total alongside the buffer,
+        overflow is detected and resolved by rescanning with the capacity
+        doubled until everything fits (counting is cheap relative to
+        materialization, so a rescan costs one extra pass).
+        """
+        boxes = self.plan()
+        self.stats = EngineStats(dense_threshold=self.dense_threshold,
+                                 n_boxes=len(boxes))
+        edge_lists = []
+        for box in boxes:
+            eu, ev, _, _ = self._box_edges(box)
+            if len(eu):
+                edge_lists.append((eu, ev))
+        if not edge_lists:
+            return np.zeros((0, 3), dtype=np.int64)
+        if capacity is None:
+            m = sum(len(eu) for eu, _ in edge_lists)
+            capacity = max(256, m)
+        cap = 1 << int(np.ceil(np.log2(max(2, capacity))))
+        while True:
+            if self.shard:
+                tris, ok = self._list_sharded(edge_lists, cap)
+            else:
+                eu = jnp.asarray(np.concatenate([e for e, _ in edge_lists]),
+                                 jnp.int32)
+                ev = jnp.asarray(np.concatenate([e for _, e in edge_lists]),
+                                 jnp.int32)
+                total, buf = _list_chunked(self.npad, eu, ev, cap=cap,
+                                           chunk=min(self.chunk, 1024))
+                total = int(total)
+                ok = total <= cap
+                tris = np.asarray(buf[:min(total, cap)])
+            if ok:
+                break
+            self.stats.n_rescans += 1
+            cap *= 2
+        tris = np.sort(np.asarray(tris, dtype=np.int64), axis=1)
+        order = np.lexsort((tris[:, 2], tris[:, 1], tris[:, 0]))
+        return tris[order]
+
+    def _list_sharded(self, edge_lists, cap: int):
+        mesh = box_mesh(self.devices)
+        schedule = self._schedule(edge_lists)
+        chunk = min(self.chunk, 1024)
+        eu_s, ev_s, ok_s = shard_box_edges(edge_lists, schedule,
+                                           pad_multiple=chunk)
+        self.stats.n_shards = len(self.devices)
+        self.stats.shard_edges = [int(x) for x in ok_s.sum(axis=1)]
+
+        @partial(jax.jit, static_argnames=())
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P(None, None), P("boxes", None),
+                           P("boxes", None), P("boxes", None)),
+                 out_specs=(P("boxes"), P("boxes", None, None)),
+                 check_rep=False)
+        def run(npad, eu, ev, ok):
+            total, buf = _list_chunked(npad, eu[0], ev[0],
+                                       cap=cap, chunk=chunk, valid=ok[0])
+            return total.reshape(1), buf.reshape(1, cap, 3)
+
+        totals, bufs = run(self.npad, jnp.asarray(eu_s), jnp.asarray(ev_s),
+                           jnp.asarray(ok_s))
+        totals = np.asarray(totals)
+        if (totals > cap).any():
+            return None, False
+        bufs = np.asarray(bufs)
+        tris = np.concatenate([bufs[s, :totals[s]] for s in range(len(totals))])
+        return tris, True
+
+
+# ---------------------------------------------------------------------------
+# module-level conveniences
+# ---------------------------------------------------------------------------
+
+def engine_count(src, dst, **kw) -> int:
+    return TriangleEngine(src, dst, **kw).count()
+
+
+def engine_list(src, dst, **kw) -> np.ndarray:
+    return TriangleEngine(src, dst, **kw).list()

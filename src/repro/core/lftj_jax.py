@@ -75,18 +75,69 @@ def csr_from_edges(src: np.ndarray, dst: np.ndarray,
 
 def pad_neighbors(indptr: np.ndarray, indices: np.ndarray,
                   k: Optional[int] = None) -> np.ndarray:
-    """(V, K) padded, sorted neighbor matrix with SENTINEL fill."""
+    """(V, K) padded, sorted neighbor matrix with SENTINEL fill.
+
+    ``k`` < max degree would silently drop neighbors (and miscount every
+    downstream intersection), so it is a hard error; rows that must be
+    capped belong in ``pad_neighbors_binned``.
+    """
     n = len(indptr) - 1
     deg = np.diff(indptr)
     if k is None:
         k = int(deg.max(initial=1))
     k = max(int(k), 1)
+    if deg.max(initial=0) > k:
+        raise ValueError(
+            f"pad_neighbors: k={k} < max degree {int(deg.max())}; this would "
+            "silently truncate neighbor lists. Pass k=None or use "
+            "pad_neighbors_binned for degree-capped rows.")
     out = np.full((n, k), SENTINEL, dtype=np.int32)
     for_rows = np.repeat(np.arange(n), deg)
     cols = np.arange(len(indices)) - np.repeat(indptr[:-1], deg)
-    ok = cols < k
-    out[for_rows[ok], cols[ok]] = indices[ok]
+    out[for_rows, cols] = indices
     return out
+
+
+def pad_neighbors_binned(indptr: np.ndarray, indices: np.ndarray,
+                         bin_growth: int = 4):
+    """Degree-binned padding: rows grouped into power-of-``bin_growth`` width
+    classes so the per-bin K caps the O(V·K_max) padding waste on skewed
+    graphs (a hub no longer forces every row to its width).
+
+    Returns ``(row_bin, bins)`` where ``row_bin[v]`` is the bin id of vertex
+    v and ``bins[i] = (rows, npad)`` holds the vertex ids in bin i plus
+    their (len(rows), K_i) padded neighbor matrix. Vertices with degree 0
+    get bin -1 (they cannot participate in any intersection).
+    """
+    n = len(indptr) - 1
+    deg = np.diff(indptr)
+    row_bin = np.full(n, -1, dtype=np.int64)
+    bins = []
+    nonzero = deg > 0
+    if nonzero.any():
+        widths = []
+        k = 1
+        kmax = int(deg.max())
+        while True:
+            widths.append(k)
+            if k >= kmax:
+                break
+            k *= bin_growth
+        edges_lo = [w // bin_growth + 1 if w > 1 else 1 for w in widths]
+        for b, (klo, khi) in enumerate(zip(edges_lo, widths)):
+            rows = np.flatnonzero((deg >= klo) & (deg <= khi))
+            if len(rows) == 0:
+                bins.append((rows, np.zeros((0, khi), dtype=np.int32)))
+                continue
+            row_bin[rows] = b
+            npad = np.full((len(rows), khi), SENTINEL, dtype=np.int32)
+            d = deg[rows]
+            rr = np.repeat(np.arange(len(rows)), d)
+            cc = np.arange(int(d.sum())) - np.repeat(np.cumsum(d) - d, d)
+            src_idx = np.repeat(indptr[rows], d) + cc
+            npad[rr, cc] = indices[src_idx]
+            bins.append((rows, npad))
+    return row_bin, bins
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +177,89 @@ def _count_chunked(npad: jnp.ndarray, eu: jnp.ndarray, ev: jnp.ndarray,
     total, _ = jax.lax.scan(body, jnp.int64(0) if jax.config.jax_enable_x64
                             else jnp.int32(0), (eu_c, ev_c, va_c))
     return total
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def _count_rows_chunked(a_rows: jnp.ndarray, b_rows: jnp.ndarray,
+                        chunk: int = 2048) -> jnp.ndarray:
+    """Σ_i |a_rows[i] ∩ b_rows[i]| for pre-gathered row pairs.
+
+    Unlike ``_count_chunked`` the two sides may have different widths
+    (degree-binned padding): the narrower row is probed into the wider via
+    searchsorted — the min(d_x, d_y) accounting of Thm. 17. Padding rows
+    are all-SENTINEL and contribute zero.
+    """
+    if a_rows.shape[1] > b_rows.shape[1]:  # intersection is symmetric
+        a_rows, b_rows = b_rows, a_rows
+    e = a_rows.shape[0]
+    n_chunks = (e + chunk - 1) // chunk
+    pad = n_chunks * chunk - e
+    a_p = jnp.concatenate(
+        [a_rows, jnp.full((pad, a_rows.shape[1]), SENTINEL, a_rows.dtype)])
+    b_p = jnp.concatenate(
+        [b_rows, jnp.full((pad, b_rows.shape[1]), SENTINEL, b_rows.dtype)])
+    a_c = a_p.reshape(n_chunks, chunk, a_rows.shape[1])
+    b_c = b_p.reshape(n_chunks, chunk, b_rows.shape[1])
+
+    def body(carry, inp):
+        a, b = inp
+        cnt = jax.vmap(_row_intersect_count)(a, b)
+        return carry + jnp.sum(cnt), None
+
+    total, _ = jax.lax.scan(body, jnp.int32(0), (a_c, b_c))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# listing (enumeration) — bounded output buffer, overflow detected by caller
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cap", "chunk"))
+def _list_chunked(npad: jnp.ndarray, eu: jnp.ndarray, ev: jnp.ndarray,
+                  cap: int, chunk: int = 1024, valid=None):
+    """Enumerate triangles (u, v, z) with z ∈ N(u) ∩ N(v) for each edge.
+
+    Returns ``(total, buf)`` where ``buf`` is a (cap, 3) int32 buffer holding
+    the first ``min(total, cap)`` triangles. ``total`` is always the exact
+    count: when ``total > cap`` the buffer overflowed and the caller rescans
+    with a larger cap (engine's overflow→rescan protocol). ``valid`` masks
+    out pre-padded edge slots (sharded layout); ``None`` = all real.
+    """
+    m = eu.shape[0]
+    k = npad.shape[1]
+    n_chunks = (m + chunk - 1) // chunk
+    pad = n_chunks * chunk - m
+    eu_p = jnp.concatenate([eu, jnp.full((pad,), 0, eu.dtype)])
+    ev_p = jnp.concatenate([ev, jnp.full((pad,), 0, ev.dtype)])
+    ok0 = jnp.ones((m,), bool) if valid is None else valid.astype(bool)
+    valid = jnp.concatenate([ok0, jnp.zeros((pad,), bool)])
+    eu_c = eu_p.reshape(n_chunks, chunk)
+    ev_c = ev_p.reshape(n_chunks, chunk)
+    va_c = valid.reshape(n_chunks, chunk)
+    # one spill row past the end of the buffer swallows overflow writes
+    buf0 = jnp.zeros((cap + 1, 3), jnp.int32)
+
+    def body(carry, inp):
+        total, buf = carry
+        u, v, ok = inp
+        a = npad[u]                               # (chunk, K) candidate z's
+        b = npad[v]
+        pos = jnp.clip(jax.vmap(jnp.searchsorted)(b, a), 0, k - 1)
+        hit = (jnp.take_along_axis(b, pos, axis=1) == a) \
+            & (a != SENTINEL) & ok[:, None]
+        flat = hit.reshape(-1)
+        zs = a.reshape(-1)
+        us = jnp.repeat(u, k).astype(jnp.int32)
+        vs = jnp.repeat(v, k).astype(jnp.int32)
+        offs = total + jnp.cumsum(flat) - flat    # exclusive prefix position
+        slot = jnp.where(flat, jnp.minimum(offs, cap), cap)
+        tri = jnp.stack([us, vs, zs], axis=1)
+        buf = buf.at[slot].set(tri, mode="drop")
+        return (total + jnp.sum(flat), buf), None
+
+    (total, buf), _ = jax.lax.scan(body, (jnp.int32(0), buf0),
+                                   (eu_c, ev_c, va_c))
+    return total, buf[:cap]
 
 
 def triangle_count_vectorized(src: np.ndarray, dst: np.ndarray,
@@ -176,54 +310,16 @@ def triangle_count_boxed_vectorized(src: np.ndarray, dst: np.ndarray,
     """Boxed execution with the vectorized/dense per-box engines.
 
     The box plan comes from the paper's probe/provision machinery
-    (core.boxing.plan_boxes); each box is solved with the vectorized
-    intersection primitive, or the dense MXU formulation when the
-    box's edge density crosses ``dense_threshold``. Returns (count, info).
+    (core.boxing.plan_boxes); per-box backend dispatch (vectorized
+    binary-search vs dense MXU vs Pallas), degree binning, and device-mesh
+    sharding all live in ``core.engine.TriangleEngine`` — this wrapper is
+    the legacy single-host entry point. Returns (count, info).
     """
-    from .boxing import plan_boxes
-    from .triearray import TrieArray
+    from .engine import TriangleEngine
 
-    a, b = orient_edges(src, dst, orientation)
-    ta = TrieArray.from_edges(a, b)
-    boxes = plan_boxes(ta, mem_words)
-    indptr, indices = csr_from_edges(a, b)
-    nv = len(indptr) - 1
-    npad = jnp.asarray(pad_neighbors(indptr, indices))
-    total = 0
-    n_dense = 0
-    for (lx, hx, ly, hy) in boxes:
-        lx_, hx_ = max(lx, 0), min(hx, nv - 1)
-        ly_, hy_ = max(ly, 0), min(hy, nv - 1)
-        if hx_ < lx_ or hy_ < ly_:
-            continue
-        # in-box edges (x,y): src in [lx,hx] (the E(x,·) slice), y in [ly,hy]
-        s0, s1 = indptr[lx_], indptr[hx_ + 1]
-        eu = np.repeat(np.arange(lx_, hx_ + 1),
-                       np.diff(indptr[lx_:hx_ + 2]))
-        ev = indices[s0:s1].astype(np.int64)
-        sel = (ev >= ly_) & (ev <= hy_)
-        eu, ev = eu[sel], ev[sel]
-        if len(eu) == 0:
-            continue
-        wx, wy = hx_ - lx_ + 1, hy_ - ly_ + 1
-        density = len(eu) / max(1, wx * wy)
-        # dense path: z spans the full node range (dim z is unbounded in the
-        # box), so rows carry ALL columns: count = Σ mask ⊙ (Ax Ayᵀ).
-        if density > dense_threshold and (wx + wy) * nv <= 64_000_000:
-            ax = np.zeros((wx, nv), dtype=np.float32)
-            ay = np.zeros((wy, nv), dtype=np.float32)
-            ru = np.repeat(np.arange(lx_, hx_ + 1), np.diff(indptr[lx_:hx_ + 2]))
-            ax[ru - lx_, indices[s0:s1]] = 1.0
-            t0, t1 = indptr[ly_], indptr[hy_ + 1]
-            rv = np.repeat(np.arange(ly_, hy_ + 1), np.diff(indptr[ly_:hy_ + 2]))
-            ay[rv - ly_, indices[t0:t1]] = 1.0
-            mask = np.zeros((wx, wy), dtype=np.float32)
-            mask[eu - lx_, ev - ly_] = 1.0
-            total += int((mask * (ax @ ay.T)).sum())
-            n_dense += 1
-        else:
-            total += int(_count_chunked(npad,
-                                        jnp.asarray(eu, jnp.int32),
-                                        jnp.asarray(ev, jnp.int32),
-                                        chunk=chunk))
-    return total, {"n_boxes": len(boxes), "n_dense_boxes": n_dense}
+    eng = TriangleEngine(src, dst, mem_words=mem_words,
+                         orientation=orientation,
+                         dense_threshold=dense_threshold,
+                         chunk=chunk, shard=False)
+    count = eng.count()
+    return count, eng.stats.as_info()

@@ -15,12 +15,15 @@ def intersect_count(a, b, *, be: int = 256, use_pallas: bool = True,
     """Per-row sorted-set intersection counts |a_i ∩ b_i|.
 
     Pads rows with SENTINEL to a lane multiple and the row count to ``be``;
-    padded rows return 0 and are stripped."""
+    padded rows return 0 and are stripped. ``be`` shrinks (to a sublane
+    multiple) for small batches so a per-box call from the triangle engine
+    never pads a handful of edges up to a full 256-row tile."""
     a = jnp.asarray(a, jnp.int32)
     b = jnp.asarray(b, jnp.int32)
     e, ka = a.shape
     kb = b.shape[1]
     k = int(np.ceil(max(ka, kb, 1) / 128)) * 128
+    be = min(be, int(np.ceil(max(e, 1) / 8)) * 8)
     ep = int(np.ceil(max(e, 1) / be)) * be
     a = jnp.pad(a, ((0, ep - e), (0, k - ka)), constant_values=SENTINEL)
     b = jnp.pad(b, ((0, ep - e), (0, k - kb)), constant_values=SENTINEL)

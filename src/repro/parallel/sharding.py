@@ -10,12 +10,14 @@ GNN    : nodes/edges row-sharded over every axis (flattened); params
          replicated (they are KBs; messages dominate).
 DLRM   : embedding tables row(vocab)-sharded over model; MLPs replicated;
          batch over dp.
-Boxes  : the triangle engine shards the paper's box list over all devices.
+Boxes  : the triangle engine shards the paper's box list over all devices
+         (``box_mesh`` + ``balanced_box_schedule`` + ``shard_box_edges``
+         below; consumed by ``repro.core.engine.TriangleEngine``).
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -263,6 +265,69 @@ def dlrm_batch_sharding(mesh: Mesh, specs: Dict[str, Any]) -> Any:
         return _ns(mesh, P(dp, *([None] * (len(v.shape) - 1))))
 
     return {k: leaf(k, v) for k, v in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Boxes: data-parallel execution of the triangle engine's box work-list.
+#
+# Boxes are overlap-free, independent work items (paper §3.3), so the rule
+# is pure data parallelism: a 1-D "boxes" mesh over every device, a greedy
+# size-balanced (LPT) assignment of boxes to shards, and a device-major
+# edge layout so each shard's slice is one contiguous block.
+# ---------------------------------------------------------------------------
+
+def box_mesh(devices: Optional[Sequence] = None) -> Mesh:
+    """1-D device mesh with the single axis ``"boxes"``."""
+    devices = jax.devices() if devices is None else list(devices)
+    return Mesh(np.asarray(devices), ("boxes",))
+
+
+def balanced_box_schedule(costs: Sequence[float],
+                          n_shards: int) -> List[List[int]]:
+    """Greedy LPT: assign each box (descending cost) to the least-loaded
+    shard. Returns ``n_shards`` lists of box indices. Classic 4/3-OPT
+    makespan bound — good enough given per-box costs are themselves
+    estimates (in-box edge counts)."""
+    shards: List[List[int]] = [[] for _ in range(max(1, n_shards))]
+    loads = np.zeros(max(1, n_shards))
+    for i in sorted(range(len(costs)), key=lambda i: -costs[i]):
+        s = int(np.argmin(loads))
+        shards[s].append(i)
+        loads[s] += costs[i]
+    return shards
+
+
+def shard_box_edges(edge_lists: Sequence[Tuple[np.ndarray, np.ndarray]],
+                    schedule: Sequence[Sequence[int]],
+                    pad_multiple: int = 1,
+                    fill: int = 0) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Lay out per-box (eu, ev) edge lists device-major.
+
+    Returns ``(eu, ev, valid)`` of shape (n_shards, L) where L is the padded
+    max per-shard edge count (rounded up to ``pad_multiple``); padded slots
+    carry ``fill`` endpoints and valid == 0. Row s concatenates exactly the
+    boxes ``schedule[s]`` — the shard's independent work items.
+    """
+    n_shards = len(schedule)
+    per_shard = []
+    for boxes in schedule:
+        if boxes:
+            eu = np.concatenate([edge_lists[b][0] for b in boxes])
+            ev = np.concatenate([edge_lists[b][1] for b in boxes])
+        else:
+            eu = np.zeros(0, np.int64)
+            ev = np.zeros(0, np.int64)
+        per_shard.append((eu, ev))
+    lmax = max([len(eu) for eu, _ in per_shard] + [1])
+    L = int(-(-lmax // pad_multiple) * pad_multiple)
+    eu_s = np.full((n_shards, L), fill, np.int32)
+    ev_s = np.full((n_shards, L), fill, np.int32)
+    ok_s = np.zeros((n_shards, L), np.int32)
+    for s, (eu, ev) in enumerate(per_shard):
+        eu_s[s, :len(eu)] = eu
+        ev_s[s, :len(ev)] = ev
+        ok_s[s, :len(eu)] = 1
+    return eu_s, ev_s, ok_s
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,169 @@
+"""Minimal stand-in for ``hypothesis`` when the real package is absent.
+
+The tier-1 suite uses a small slice of the hypothesis API —
+``@settings(max_examples=..., deadline=None)``, ``@given(...)`` and the
+``integers`` / ``lists`` / ``tuples`` / ``sampled_from`` / ``booleans``
+strategies. When ``import hypothesis`` fails, ``conftest.py`` registers this
+module (and its ``strategies`` namespace) in ``sys.modules`` so the test
+modules import unchanged.
+
+The shim draws examples from a deterministically seeded PRNG (per test
+name, so runs are reproducible) and re-raises the first failure annotated
+with the falsifying example. No shrinking — install the real
+``hypothesis`` (see requirements-dev.txt) for minimized counterexamples.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+__version__ = "0.0-compat"
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+class SearchStrategy:
+    """A strategy draws one value from an RNG via ``example``."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, f):
+        return SearchStrategy(lambda rng: f(self.example(rng)))
+
+    def filter(self, pred, max_tries: int = 100):
+        def draw(rng):
+            for _ in range(max_tries):
+                v = self.example(rng)
+                if pred(v):
+                    return v
+            raise Unsatisfiable(f"filter predicate never satisfied: {pred}")
+        return SearchStrategy(draw)
+
+
+class Unsatisfiable(Exception):
+    pass
+
+
+def integers(min_value: int = -(2 ** 31), max_value: int = 2 ** 31 - 1):
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans():
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw):
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return SearchStrategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def tuples(*strategies):
+    return SearchStrategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def lists(elements, min_size: int = 0, max_size: int = 10):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def just(value):
+    return SearchStrategy(lambda rng: value)
+
+
+def one_of(*strategies):
+    return SearchStrategy(
+        lambda rng: strategies[rng.randrange(len(strategies))].example(rng))
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("SearchStrategy", "integers", "booleans", "floats",
+              "sampled_from", "tuples", "lists", "just", "one_of"):
+    setattr(strategies, _name, globals()[_name])
+
+
+# ---------------------------------------------------------------------------
+# given / settings / assume
+# ---------------------------------------------------------------------------
+
+class _Assumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.filter_too_much]
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Decorator form only (matches the suite's usage)."""
+    def apply(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return apply
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples", None) \
+                or getattr(fn, "_hyp_max_examples", None) \
+                or _DEFAULT_MAX_EXAMPLES
+            rng = random.Random(fn.__qualname__)
+            ran = 0
+            attempts = 0
+            while ran < n and attempts < 10 * n + 10:
+                attempts += 1
+                drawn = tuple(s.example(rng) for s in arg_strategies)
+                drawn_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn, **{**kwargs, **drawn_kw})
+                    ran += 1
+                except _Assumption:
+                    continue
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example (hypothesis-compat shim, "
+                        f"example {ran + 1}/{n}): args={drawn!r} "
+                        f"kwargs={drawn_kw!r}") from exc
+            return None
+
+        # Hide the drawn parameters from pytest's fixture resolution: the
+        # exposed signature keeps only the leading params (self / real
+        # fixtures) that strategies do not fill.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        keep = params[:len(params) - len(arg_strategies)]
+        keep = [p for p in keep if p.name not in kw_strategies]
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__  # or inspect follows it back to fn
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+    return decorate

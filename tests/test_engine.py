@@ -1,0 +1,340 @@
+"""TriangleEngine: cross-engine equivalence, sharding, listing, padding.
+
+The headline property (ISSUE 1 acceptance): ``TriangleEngine.count()`` and
+``.list()`` agree with the scalar ``LeapfrogTriejoin`` reference on every
+property-test graph — Erdős–Rényi, power-law (RMAT), planar grid — and on
+golden counts for known graphs (K_n → C(n,3), grids → 0), including under
+multi-device box sharding (subprocess with forced host devices).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (TrieArray, TriangleEngine, boxed_triangle_count,
+                        brute_force_count, engine_count, lftj_triangle_count,
+                        measure_dense_crossover, orient_edges, pad_neighbors,
+                        pad_neighbors_binned, plan_boxes)
+from repro.core.lftj_jax import SENTINEL, _list_chunked, csr_from_edges
+from repro.data.graphs import rmat_graph
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# graph generators for the property tests
+# ---------------------------------------------------------------------------
+
+def er_graph(n, p, seed):
+    rng = np.random.default_rng(seed)
+    adj = np.triu(rng.random((n, n)) < p, k=1)
+    src, dst = np.nonzero(adj)
+    return src.astype(np.int64), dst.astype(np.int64)
+
+
+def grid_graph(n):
+    """n x n planar grid: triangle-free by construction."""
+    i, j = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    v = (i * n + j)
+    right = np.stack([v[:, :-1].ravel(), v[:, 1:].ravel()], 1)
+    down = np.stack([v[:-1, :].ravel(), v[1:, :].ravel()], 1)
+    e = np.concatenate([right, down])
+    return e[:, 0], e[:, 1]
+
+
+def complete_graph(n):
+    i, j = np.triu_indices(n, k=1)
+    return i.astype(np.int64), j.astype(np.int64)
+
+
+def reference_count(src, dst):
+    a, b = orient_edges(src, dst)
+    return lftj_triangle_count(TrieArray.from_edges(a, b))
+
+
+def reference_list(src, dst):
+    out = []
+    a, b = orient_edges(src, dst)
+    lftj_triangle_count(TrieArray.from_edges(a, b), emit=out.append)
+    tris = np.asarray(out, dtype=np.int64).reshape(-1, 3)
+    order = np.lexsort((tris[:, 2], tris[:, 1], tris[:, 0]))
+    return tris[order]
+
+
+ENGINE_CONFIGS = [
+    dict(),
+    dict(mem_words=200),
+    dict(degree_bins=True),
+    dict(mem_words=200, degree_bins=True),
+    dict(shard=True),
+    dict(mem_words=200, shard=True),
+    dict(backend="dense"),
+    dict(backend="binary"),
+    dict(orientation="degree"),
+]
+
+
+class TestCrossEngineEquivalence:
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_erdos_renyi(self, seed):
+        src, dst = er_graph(30, 0.2, seed)
+        want = reference_count(src, dst)
+        for kw in ENGINE_CONFIGS:
+            assert engine_count(src, dst, **kw) == want, kw
+
+    @settings(max_examples=3, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_power_law(self, seed):
+        src, dst = rmat_graph(64, 600, seed=seed)
+        want = reference_count(src, dst)
+        for kw in ENGINE_CONFIGS:
+            assert engine_count(src, dst, **kw) == want, kw
+
+    @settings(max_examples=3, deadline=None)
+    @given(st.integers(2, 7))
+    def test_planar_grid_triangle_free(self, n):
+        src, dst = grid_graph(n)
+        assert reference_count(src, dst) == 0
+        for kw in ENGINE_CONFIGS:
+            assert engine_count(src, dst, **kw) == 0, kw
+
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(3, 12))
+    def test_golden_complete_graph(self, n):
+        src, dst = complete_graph(n)
+        want = n * (n - 1) * (n - 2) // 6
+        assert reference_count(src, dst) == want
+        for kw in ENGINE_CONFIGS:
+            assert engine_count(src, dst, **kw) == want, kw
+
+    def test_agrees_with_brute_force(self):
+        src, dst = rmat_graph(200, 2500, seed=11)
+        want = brute_force_count(src, dst)
+        eng = TriangleEngine(src, dst, mem_words=300)
+        assert eng.count() == want
+        assert eng.stats.n_boxes > 1
+
+
+class TestListing:
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_list_matches_reference(self, seed):
+        src, dst = er_graph(25, 0.25, seed)
+        want = reference_list(src, dst)
+        for kw in [dict(), dict(mem_words=150), dict(shard=True)]:
+            got = TriangleEngine(src, dst, **kw).list()
+            np.testing.assert_array_equal(got, want), kw
+
+    def test_overflow_rescan(self):
+        """A deliberately tiny buffer must still produce the full, exact
+        listing via the overflow→rescan protocol."""
+        src, dst = complete_graph(12)
+        eng = TriangleEngine(src, dst)
+        tris = eng.list(capacity=4)
+        assert len(tris) == 12 * 11 * 10 // 6
+        assert eng.stats.n_rescans >= 1
+        np.testing.assert_array_equal(tris, reference_list(src, dst))
+
+    def test_list_chunked_total_exact_on_overflow(self):
+        import jax.numpy as jnp
+        src, dst = complete_graph(10)
+        a, b = orient_edges(src, dst)
+        indptr, indices = csr_from_edges(a, b)
+        npad = jnp.asarray(pad_neighbors(indptr, indices))
+        total, buf = _list_chunked(npad, jnp.asarray(a, jnp.int32),
+                                   jnp.asarray(b, jnp.int32), cap=8)
+        assert int(total) == 120  # exact count even though only 8 fit
+        assert buf.shape == (8, 3)
+
+    def test_listing_empty_graph(self):
+        tris = TriangleEngine(np.zeros(0, int), np.zeros(0, int)).list()
+        assert tris.shape == (0, 3)
+
+
+class TestDegreeOrientation:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_outdegree_sqrt_bound(self, seed):
+        """degree orientation: if out-deg(v) = d, every out-neighbor has
+        degree >= d, so 2|E| >= d^2 — out-degrees are <= sqrt(2|E|)."""
+        src, dst = rmat_graph(128, 1500, seed=seed)
+        a, b = orient_edges(src, dst, mode="degree")
+        m = len(a)
+        if m == 0:
+            return
+        out_deg = np.bincount(a)
+        assert out_deg.max() <= np.sqrt(2 * m) + 1
+
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_orientation_invariant_counts(self, seed):
+        src, dst = er_graph(30, 0.18, seed)
+        want = reference_count(src, dst)
+        assert engine_count(src, dst, orientation="degree") == want
+        assert engine_count(src, dst, orientation="degree",
+                            mem_words=200) == want
+
+
+class TestBoxingInvariants:
+    def _plan(self, seed=3, mem=300):
+        src, dst = rmat_graph(128, 2000, seed=seed)
+        a, b = orient_edges(src, dst)
+        ta = TrieArray.from_edges(a, b)
+        return a, b, ta, plan_boxes(ta, mem), mem
+
+    def test_boxes_partition_oriented_edges(self):
+        """Every oriented edge falls in exactly one box (the partitioning
+        is overlap-free; pruned boxes hold no oriented edge)."""
+        a, b, ta, boxes, _ = self._plan()
+        covered = np.zeros(len(a), dtype=int)
+        for (lx, hx, ly, hy) in boxes:
+            covered += ((a >= lx) & (a <= hx) & (b >= ly) & (b <= hy))
+        assert (covered == 1).all()
+
+    def test_per_box_provisioned_words_within_budget(self):
+        """The x-dimension slice each box provisions fits its budget share
+        (4:1 x:y split as in §5), except single-value pinned (spill) boxes
+        which are allowed to exceed it by construction."""
+        a, b, ta, boxes, mem = self._plan()
+        bx = int(mem * 4.0 / 5.0)
+        for (lx, hx, ly, hy) in boxes:
+            lo = max(lx, int(ta.val[0][0]))
+            hi = min(hx, int(ta.val[0][-1]))
+            if hi < lo:
+                continue
+            words = ta.slice_words((), lo, hi)
+            assert words <= bx or lo == hi, (lx, hx, words, bx)
+
+    def test_spill_path_exercised(self):
+        """A hub star + triangle forces single-value pinned boxes; the
+        count must survive the spill handling."""
+        hub = np.zeros(80, dtype=int)
+        leaves = np.arange(1, 81)
+        src = np.concatenate([hub, [1, 1, 2]])
+        dst = np.concatenate([leaves, [2, 3, 3]])
+        want = brute_force_count(src, dst)
+        ta = TrieArray.from_edges(*orient_edges(src, dst))
+        cnt, stats = boxed_triangle_count(ta, mem_words=24)
+        assert cnt == want
+        assert stats.n_spills > 0
+        assert engine_count(src, dst, mem_words=24) == want
+
+    def test_plan_single_box_when_budget_fits(self):
+        src, dst = er_graph(20, 0.3, seed=0)
+        eng = TriangleEngine(src, dst, mem_words=1 << 20)
+        eng.count()
+        assert eng.stats.n_boxes == 1
+
+
+class TestPadding:
+    def test_pad_neighbors_rejects_truncation(self):
+        """Regression: k < max degree used to silently drop neighbors and
+        miscount; it must be a hard error now."""
+        src = np.array([0, 0, 0, 1])
+        dst = np.array([1, 2, 3, 2])
+        indptr, indices = csr_from_edges(src, dst)
+        with pytest.raises(ValueError, match="truncate"):
+            pad_neighbors(indptr, indices, k=2)
+        ok = pad_neighbors(indptr, indices, k=5)   # wider than needed: fine
+        assert ok.shape[1] == 5
+        assert (np.sort(ok[0][ok[0] != SENTINEL]) == [1, 2, 3]).all()
+
+    def test_binned_padding_reconstructs(self):
+        src, dst = rmat_graph(64, 800, seed=2)
+        a, b = orient_edges(src, dst)
+        indptr, indices = csr_from_edges(a, b)
+        row_bin, bins = pad_neighbors_binned(indptr, indices)
+        deg = np.diff(indptr)
+        seen = {}
+        for rows, npad in bins:
+            for j, v in enumerate(rows):
+                seen[v] = npad[j][npad[j] != SENTINEL]
+        for v in range(len(deg)):
+            if deg[v] == 0:
+                assert row_bin[v] == -1
+            else:
+                np.testing.assert_array_equal(
+                    seen[v], indices[indptr[v]:indptr[v + 1]])
+
+    def test_binned_padding_caps_waste(self):
+        """One hub must not inflate every row to K = max degree."""
+        hub = np.zeros(200, dtype=int)
+        leaves = np.arange(1, 201)
+        extra_s = np.arange(1, 50)
+        extra_d = np.arange(2, 51)
+        src = np.concatenate([hub, extra_s])
+        dst = np.concatenate([leaves, extra_d])
+        a, b = orient_edges(src, dst)
+        indptr, indices = csr_from_edges(a, b)
+        monolithic = pad_neighbors(indptr, indices)
+        _, bins = pad_neighbors_binned(indptr, indices)
+        binned_words = sum(npad.size for _, npad in bins)
+        assert binned_words < monolithic.size / 10
+
+
+class TestEngineConfig:
+    def test_measured_crossover_is_sane(self):
+        thr = measure_dense_crossover()
+        assert 0.0 < thr <= 1.0
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError):
+            TriangleEngine(np.array([0]), np.array([1]), backend="gpu")
+
+    def test_stats_report_backends(self):
+        src, dst = rmat_graph(128, 2000, seed=1)
+        eng = TriangleEngine(src, dst, mem_words=300)
+        eng.count()
+        s = eng.stats
+        executed = s.n_dense_boxes + s.n_binary_boxes + s.n_pallas_boxes
+        assert 1 <= executed <= s.n_boxes  # empty boxes execute no backend
+        assert s.dense_threshold == 0.05
+
+
+_MULTI_DEVICE_SCRIPT = r"""
+import numpy as np, jax
+assert len(jax.devices()) == 8, jax.devices()
+from repro.core import TriangleEngine, TrieArray, lftj_triangle_count, orient_edges
+from repro.data.graphs import rmat_graph
+
+for seed in (0, 5):
+    src, dst = rmat_graph(128, 1500, seed=seed)
+    a, b = orient_edges(src, dst)
+    out = []
+    want = lftj_triangle_count(TrieArray.from_edges(a, b), emit=out.append)
+    eng = TriangleEngine(src, dst, mem_words=300)
+    assert eng.shard and len(eng.devices) == 8
+    got = eng.count()
+    assert got == want, (seed, got, want)
+    assert eng.stats.n_shards == 8
+    tris = eng.list()
+    assert len(tris) == want
+    ref = np.sort(np.asarray(out, np.int64).reshape(-1, 3), axis=1)
+    ref = ref[np.lexsort((ref[:, 2], ref[:, 1], ref[:, 0]))]
+    assert (tris == ref).all()
+print("MULTI_DEVICE_OK")
+"""
+
+
+class TestMultiDeviceSharding:
+    def test_count_and_list_under_8_host_devices(self):
+        """Acceptance: count()/list() agree with the reference under
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 box sharding."""
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=8")
+        env["PYTHONPATH"] = os.path.abspath(SRC) + os.pathsep \
+            + env.get("PYTHONPATH", "")
+        # the forced-device-count flag only applies to the host platform;
+        # pin it so jax never attempts (slow) accelerator backend init
+        env["JAX_PLATFORMS"] = "cpu"
+        res = subprocess.run([sys.executable, "-c", _MULTI_DEVICE_SCRIPT],
+                             capture_output=True, text=True, env=env,
+                             timeout=600)
+        assert res.returncode == 0, res.stderr[-2000:]
+        assert "MULTI_DEVICE_OK" in res.stdout
