@@ -7,7 +7,19 @@ the benchmark-specific figure of merit: I/O counts, box counts, ratios...).
 from __future__ import annotations
 
 import time
-from typing import Callable, Optional
+from typing import Callable, Dict, List, Optional
+
+# every emit() lands here too, so the harness can dump a machine-readable
+# run record (CI uploads it as a build artifact to track perf per PR)
+_ROWS: List[Dict[str, str]] = []
+
+
+def collected_rows() -> List[Dict[str, str]]:
+    return list(_ROWS)
+
+
+def reset_rows() -> None:
+    _ROWS.clear()
 
 
 def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
@@ -24,4 +36,6 @@ def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
 
 
 def emit(name: str, us: float, derived: str = "") -> None:
+    _ROWS.append({"name": name, "us_per_call": f"{us:.1f}",
+                  "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)

@@ -4,18 +4,23 @@
   fig9   vanilla vs boxed block I/Os + Prop.4  (benchmarks.vanilla_vs_boxed)
   fig11  boxed LFTJ vs specialized MGT         (benchmarks.lftj_vs_mgt)
   thm17  arboricity scaling of LFTJ-Δ          (benchmarks.arboricity_scaling)
+  ooc    out-of-core engine I/O vs Thm. 10     (benchmarks.outofcore)
   kernels Pallas kernels vs references          (benchmarks.kernel_bench)
   roofline per-cell roofline terms from dry-run (benchmarks.roofline)
 
 Prints ``name,us_per_call,derived`` CSV. ``--fast`` shrinks sizes;
 ``--only fig9`` runs a single suite; ``--smoke`` is the CI gate — the
 cheapest suite subset at fast sizes, exercising the engine + I/O model
-end to end.
+(including the mmap edge store) end to end. ``--json PATH`` additionally
+writes the emitted rows as JSON (CI uploads it as a build artifact so the
+perf trajectory is tracked per PR).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
@@ -25,34 +30,53 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke pass: fig9 + fig11 at --fast sizes")
+                    help="CI smoke pass: fig9 + fig11 + ooc at --fast sizes")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write emitted rows as a JSON run record")
     args = ap.parse_args()
     if args.smoke:
         args.fast = True
 
     from . import (arboricity_scaling, boxing_overhead, kernel_bench,
-                   lftj_vs_mgt, roofline, vanilla_vs_boxed)
+                   lftj_vs_mgt, outofcore, roofline, vanilla_vs_boxed)
+    from .common import collected_rows, reset_rows
 
     suites = {
         "fig7": boxing_overhead.main,
         "fig9": vanilla_vs_boxed.main,
         "fig11": lftj_vs_mgt.main,
         "thm17": arboricity_scaling.main,
+        "ooc": outofcore.main,
         "kernels": kernel_bench.main,
         "roofline": roofline.main,
     }
     if args.only:
         names = [args.only]
     elif args.smoke:
-        names = ["fig9", "fig11"]
+        names = ["fig9", "fig11", "ooc"]
     else:
         names = list(suites)
+    reset_rows()
+    timings = {}
     print("name,us_per_call,derived")
     for n in names:
         t0 = time.time()
         print(f"# --- {n} ---", flush=True)
         suites[n](fast=args.fast)
-        print(f"# {n} done in {time.time()-t0:.1f}s", flush=True)
+        timings[n] = time.time() - t0
+        print(f"# {n} done in {timings[n]:.1f}s", flush=True)
+    if args.json:
+        record = {
+            "suites": names,
+            "fast": bool(args.fast),
+            "python": platform.python_version(),
+            "suite_seconds": {k: round(v, 2) for k, v in timings.items()},
+            "rows": collected_rows(),
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"# wrote {args.json} ({len(record['rows'])} rows)",
+              flush=True)
 
 
 if __name__ == '__main__':

@@ -4,7 +4,8 @@ from .triearray import SPILL, TrieArray, TrieArraySlice
 from .leapfrog import (Atom, LeapfrogJoin, LeapfrogTriejoin, TrieIterator,
                        lftj_triangle_count, triangle_query_atoms)
 from .boxing import (BoxedLFTJ, BoxingConfig, BoxStats, boxed_triangle_count,
-                     plan_boxes)
+                     plan_boxes, plan_boxes_from_degrees)
+from .executor import BoxSlice, StreamingExecutor
 from .iomodel import BlockDevice, CountingReader, IOStats
 from .lftj_jax import (csr_from_edges, orient_edges, pad_neighbors,
                        pad_neighbors_binned, triangle_count_boxed_vectorized,
@@ -27,5 +28,6 @@ __all__ = [
     "build_indexes", "rank_for_order", "run_query", "brute_force_count",
     "count_triangles", "list_triangles", "adversarial_graph",
     "pad_neighbors_binned", "EngineStats", "TriangleEngine", "engine_count",
-    "engine_list", "measure_dense_crossover",
+    "engine_list", "measure_dense_crossover", "plan_boxes_from_degrees",
+    "BoxSlice", "StreamingExecutor",
 ]

@@ -349,6 +349,61 @@ def plan_boxes(edges_ta: TrieArray, mem_words: int,
     return boxes
 
 
+def _greedy_degree_cuts(cost: np.ndarray, budget: int) -> list:
+    """Contiguous row ranges [(lo, hi)] with Σ cost ≤ budget each.
+
+    The degree-prefix-sum analogue of ``TrieArray.probe``: ranges grow until
+    the next row would overflow the budget; a single row whose cost exceeds
+    the budget becomes its own pinned range (the plan-level spill, matching
+    ``plan_boxes``). Zero-cost rows are absorbed for free, so the ranges
+    always cover [0, n)."""
+    n = len(cost)
+    cum = np.concatenate([[0], np.cumsum(cost, dtype=np.int64)])
+    cuts = []
+    lo = 0
+    while lo < n:
+        # largest hi with cum[hi+1] - cum[lo] <= budget
+        hi = int(np.searchsorted(cum, cum[lo] + budget, side="right")) - 2
+        hi = max(hi, lo)  # pinned row when a single row overflows
+        cuts.append((lo, hi))
+        lo = hi + 1
+    if not cuts:
+        cuts = [(0, max(0, n - 1))]
+    return cuts
+
+
+def plan_boxes_from_degrees(indptr: np.ndarray, mem_words: int,
+                            ratio_xy: float = 4.0,
+                            monotone_prune: bool = True,
+                            row_overhead: int = 2) -> list:
+    """Triangle-query box plan from the resident degree index alone.
+
+    The out-of-core analogue of ``plan_boxes``: instead of probing a
+    TrieArray (which requires the whole relation in memory), the plan is
+    derived from the (V+1)-word ``indptr`` prefix sums — the only structure
+    the streaming engine keeps resident. Slice cost per present row is
+    ``deg + row_overhead`` words, mirroring ``TrieArray.slice_words``
+    (values + idx entries). Budget split and hy < lx pruning follow §5.
+    """
+    nv = len(indptr) - 1
+    if nv <= 0:
+        return []
+    deg = np.diff(np.asarray(indptr, dtype=np.int64))
+    cost = np.where(deg > 0, deg + row_overhead, 0)
+    if int(cost.sum()) <= mem_words:
+        return [(0, nv - 1, 0, nv - 1)]
+    bx = max(1, int(mem_words * ratio_xy / (1 + ratio_xy)))
+    by = max(1, mem_words - bx)
+    xcuts = _greedy_degree_cuts(cost, bx)
+    ycuts = _greedy_degree_cuts(cost, by)
+    boxes = []
+    for lx, hx in xcuts:
+        for ly, hy in ycuts:
+            if hy >= lx or not monotone_prune:
+                boxes.append((lx, hx, ly, hy))
+    return boxes
+
+
 def boxed_triangle_count(edges_ta: TrieArray, mem_words: int,
                          block_words: int = 4096,
                          device: Optional[BlockDevice] = None,

@@ -1,39 +1,45 @@
-"""TriangleEngine: the unified execution facade for triangle listing/counting.
+"""TriangleEngine: planner + facade over the streaming box executor.
 
-Ties together every piece the repo already had but never connected:
+The engine is split into two layers (out-of-core refactor):
 
-  * ``core.boxing.plan_boxes``   — the paper's probe/provision box planner
-    (§3, Alg. 2) producing overlap-free (x-range, y-range) work items that
-    fit the memory budget;
-  * backend dispatch per box      — vectorized binary-search intersection
-    (``lftj_jax._count_chunked``), the dense MXU formulation
-    Σ mask ⊙ (Ax Ayᵀ) (``kernels.triangle_dense``), or the Pallas rotation
-    kernel (``kernels.intersect``), chosen by box edge density against a
-    (optionally measured) crossover;
-  * box sharding                  — the "Boxes" rule of
-    ``repro.parallel.sharding``: a greedy size-balanced (LPT) schedule of
-    boxes over a 1-D ``"boxes"`` device mesh executed with ``shard_map``
-    (boxes are independent by construction, §3.3, so this is pure data
-    parallelism — the paper's "alleviated by parallelization" claim);
-  * listing, not just counting    — enumeration into a bounded per-shard
-    output buffer with exact total counts, so overflow is detected and
-    resolved by a rescan at doubled capacity;
-  * degree-binned padding         — ``pad_neighbors_binned`` caps the
-    O(V·K_max) padding waste of a single hub row on skewed graphs.
+  * **planner** (this module)    — orientation/CSR preparation, the box plan
+    (``core.boxing.plan_boxes`` in memory, ``plan_boxes_from_degrees`` from
+    the resident degree index when the graph lives in a
+    ``data.edgestore.EdgeStore``), per-box backend dispatch by edge density,
+    and shard scheduling. The public ``TriangleEngine`` API is unchanged.
+  * **streaming executor** (``core.executor.StreamingExecutor``) — pulls
+    boxes from a work queue and materializes, per box, a vertex-renumbered
+    *compacted* neighbor slice (never the global V×K ``npad``), overlapping
+    host-side slice construction with device compute via
+    ``data.pipeline.Prefetcher``. Source reads are charged to a
+    ``core.iomodel.BlockDevice`` so ``EngineStats`` carries measured block
+    I/Os (comparable against the paper's Thm. 10 bound).
+
+Sharded execution (the "Boxes" rule of ``repro.parallel.sharding``) no
+longer replicates the padded neighbor matrix: each shard receives only the
+renumbered neighbor rows its boxes reference (``shard_local_slices``), so
+per-device memory scales with the box slice, not the graph. With
+``degree_bins=True`` the shard path runs one kernel per degree-bin pair on
+``pad_neighbors_binned``-width matrices.
 
 Usage::
 
-    eng = TriangleEngine(src, dst, mem_words=1 << 16)
+    eng = TriangleEngine(src, dst, mem_words=1 << 16)   # in-memory
+    eng = TriangleEngine(store="graph.csr", mem_words=1 << 16)  # out-of-core
     n   = eng.count()
     tri = eng.list()          # (n, 3) canonical (min, mid, max) rows
-    eng.stats                 # boxes, backends, shards, rescans
+    eng.stats                 # boxes, backends, shards, block I/Os
 """
 
 from __future__ import annotations
 
+import json
+import os
+import tempfile
 import time
+import warnings
 from dataclasses import dataclass, field
-from functools import lru_cache, partial
+from functools import partial
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -42,16 +48,19 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.data.edgestore import EdgeStore, InMemoryEdgeSource
 from repro.parallel.sharding import (balanced_box_schedule, box_mesh,
-                                     shard_box_edges)
+                                     shard_local_slices)
 
+from .executor import StreamingExecutor, _pow2
+from .iomodel import BlockDevice
 from .lftj_jax import (SENTINEL, _count_chunked, _count_rows_chunked,
                        _list_chunked, _row_intersect_count, csr_from_edges,
                        orient_edges, pad_neighbors, pad_neighbors_binned)
 
 BACKENDS = ("auto", "binary", "dense", "pallas")
 
-# dense-path feasibility guard: (wx + wy) · V one-hot words per box
+# dense-path feasibility guard: one-hot words per box (slice-scaled estimate)
 _DENSE_WORDS_CAP = 64_000_000
 
 
@@ -67,6 +76,19 @@ class EngineStats:
     n_rescans: int = 0
     dense_threshold: float = 0.0
     shard_edges: List[int] = field(default_factory=list)
+    # streaming executor (out-of-core) accounting
+    n_streamed_boxes: int = 0
+    slice_words_read: int = 0          # raw CSR words DMA'd across all boxes
+    max_slice_words: int = 0           # largest single-box DMA (working set)
+    max_slice_padded_words: int = 0    # largest box-local padded matrix
+    # measured block I/O on the attached BlockDevice (edge-store runs)
+    block_reads: int = 0
+    block_writes: int = 0
+    word_reads: int = 0
+    # sharded-path device array shapes (non-replicated slices)
+    local_npad_shape: Optional[Tuple[int, int, int]] = None
+    shard_rows: List[int] = field(default_factory=list)
+    source: str = "memory"
 
     def as_info(self) -> dict:
         """Legacy info dict (triangle_count_boxed_vectorized compat)."""
@@ -75,19 +97,72 @@ class EngineStats:
 
 
 # ---------------------------------------------------------------------------
-# measured density crossover (binary-search vs dense MXU formulation)
+# measured density crossover (binary-search vs dense MXU formulation),
+# persisted per (jax backend, device kind) under ~/.cache/repro
 # ---------------------------------------------------------------------------
 
-@lru_cache(maxsize=4)
+_crossover_memo: dict = {}
+
+
+def _crossover_cache_file() -> str:
+    base = os.environ.get("REPRO_CACHE_DIR") \
+        or os.path.join(os.path.expanduser("~"), ".cache", "repro")
+    return os.path.join(base, "crossover.json")
+
+
+def _crossover_load() -> dict:
+    try:
+        with open(_crossover_cache_file()) as f:
+            data = json.load(f)
+        return data if isinstance(data, dict) else {}
+    except (OSError, ValueError):
+        return {}
+
+
+def _crossover_store(data: dict) -> None:
+    path = _crossover_cache_file()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # a read-only home must never break execution
+
+
 def measure_dense_crossover(nv: int = 256, repeats: int = 3,
                             seed: int = 0) -> float:
-    """Time both backends on synthetic boxes of rising density and return
-    the lowest density where the dense formulation wins.
+    """Lowest box density where the dense MXU formulation beats the
+    binary-search backend, measured once per (jax backend, device kind).
 
-    Cached per process: the crossover is a property of the backend/hardware,
-    not of the input graph. Falls back to 1.0 (never dense) only if dense
-    never wins on the sampled grid.
+    The measurement is persisted to a JSON cache
+    (``$REPRO_CACHE_DIR/crossover.json``, default ``~/.cache/repro``) so a
+    fleet of processes on the same hardware calibrates once, not per
+    process. Set ``REPRO_CROSSOVER_REMEASURE=1`` to force a fresh
+    measurement (e.g. after a driver/runtime upgrade); the new value
+    overwrites the cached one. Falls back to 1.0 (never dense) only if
+    dense never wins on the sampled grid.
     """
+    dev = jax.devices()[0]
+    key = f"{jax.default_backend()}:{getattr(dev, 'device_kind', '?')}:nv{nv}"
+    force = os.environ.get("REPRO_CROSSOVER_REMEASURE", "") not in ("", "0")
+    if not force:
+        if key in _crossover_memo:
+            return _crossover_memo[key]
+        cached = _crossover_load().get(key)
+        if isinstance(cached, (int, float)) and 0.0 < cached <= 1.0:
+            _crossover_memo[key] = float(cached)
+            return float(cached)
+    value = _measure_dense_crossover(nv, repeats, seed)
+    _crossover_memo[key] = value
+    data = _crossover_load()
+    data[key] = value
+    _crossover_store(data)
+    return value
+
+
+def _measure_dense_crossover(nv: int, repeats: int, seed: int) -> float:
     rng = np.random.default_rng(seed)
     densities = (0.01, 0.02, 0.05, 0.10, 0.20, 0.40)
     crossover = 1.0
@@ -128,29 +203,46 @@ def _time(fn) -> float:
 # ---------------------------------------------------------------------------
 
 class TriangleEngine:
-    """Unified boxed/sharded triangle counting + listing over one graph.
+    """Unified boxed/sharded/streaming triangle counting + listing.
 
     Parameters
     ----------
-    src, dst : undirected edge endpoints (host numpy).
+    src, dst : undirected edge endpoints (host numpy); omit when ``store``
+        is given.
+    store : path to a ``data.edgestore`` file (or an open ``EdgeStore``):
+        the out-of-core source. The engine then keeps only the (V+1)-word
+        degree index resident and streams per-box slices from disk, with
+        block I/Os measured on ``device``.
+    device : optional ``core.iomodel.BlockDevice`` charging source reads.
+        Defaults to a fresh device for store-backed runs (block size
+        ``io_block_words``, cache sized to the memory budget); ``None``
+        for in-memory runs (no accounting).
     mem_words : memory budget for the box planner; ``None`` = one box.
     orientation : 'minmax' (paper §2.3) or 'degree' (√|E| out-degree cap).
+        Store-backed graphs carry their orientation in the file header.
     backend : 'auto' (density dispatch), or force 'binary' / 'dense' /
         'pallas' for every box.
     dense_threshold : box edge-density above which 'auto' picks the dense
-        MXU formulation; the string 'measured' times both backends once per
-        process (``measure_dense_crossover``) and uses the result.
+        MXU formulation; the string 'measured' uses the persisted
+        calibration (``measure_dense_crossover``).
     degree_bins : bin vertices by degree (power-of-4 widths) so padding is
-        per-bin instead of global K = max degree (skewed graphs).
-    devices : devices for box sharding; default ``jax.devices()``. Sharding
-        engages whenever more than one device is available (or
-        ``shard=True`` forces the shard_map path on a single device).
+        per-bin instead of global K = max degree (skewed graphs). Requires
+        the edge list in memory: store-backed engines ignore it (with a
+        warning) — the streaming executor already compacts padding to the
+        box-local max degree, which is the out-of-core analogue.
+    devices : devices for box sharding; default ``jax.devices()``.
     chunk : edge-chunk length of the scan (peak memory O(chunk · K)).
+    prefetch_depth : how many box slices the host builds ahead of the
+        device (``data.pipeline.Prefetcher`` double-buffering).
     use_pallas_kernels : run kernels compiled (TPU) vs interpret; default
         only compiles on TPU.
     """
 
-    def __init__(self, src: np.ndarray, dst: np.ndarray, *,
+    def __init__(self, src: Optional[np.ndarray] = None,
+                 dst: Optional[np.ndarray] = None, *,
+                 store=None,
+                 device: Optional[BlockDevice] = None,
+                 io_block_words: int = 4096,
                  mem_words: Optional[int] = None,
                  orientation: str = "minmax",
                  backend: str = "auto",
@@ -159,14 +251,15 @@ class TriangleEngine:
                  devices: Optional[Sequence] = None,
                  shard: str | bool = "auto",
                  chunk: int = 2048,
+                 prefetch_depth: int = 2,
                  use_pallas_kernels: Optional[bool] = None):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
-        self.orientation = orientation
         self.backend = backend
         self.degree_bins = degree_bins
         self.chunk = int(chunk)
         self.mem_words = mem_words
+        self.prefetch_depth = int(prefetch_depth)
         if use_pallas_kernels is None:
             use_pallas_kernels = jax.default_backend() == "tpu"
         self.use_pallas_kernels = bool(use_pallas_kernels)
@@ -181,11 +274,49 @@ class TriangleEngine:
             dense_threshold = measure_dense_crossover()
         self.dense_threshold = float(dense_threshold)
 
-        a, b = orient_edges(np.asarray(src), np.asarray(dst), orientation)
-        self.a, self.b = a, b
-        self.nv = int(max(a.max(initial=-1), b.max(initial=-1))) + 1
-        self.indptr, self.indices = csr_from_edges(a, b, n_nodes=self.nv) \
-            if self.nv else (np.zeros(1, np.int64), np.zeros(0, np.int32))
+        if store is not None:
+            if src is not None or dst is not None:
+                raise ValueError("pass either (src, dst) or store=, not both")
+            self.source = store if isinstance(store, EdgeStore) \
+                else EdgeStore(store)
+            if device is None:
+                cache = max(2, (mem_words or (1 << 22)) // io_block_words)
+                device = BlockDevice(block_words=io_block_words,
+                                     cache_blocks=cache)
+            self.source.attach_device(device)
+            self.device = device
+            self.orientation = self.source.orientation
+            self.nv = self.source.n_nodes
+            self.indptr = self.source.indptr
+            self.indices = None          # never resident: streamed per box
+            self.a = self.b = None
+        else:
+            if src is None or dst is None:
+                raise ValueError(
+                    "TriangleEngine needs either (src, dst) edge arrays or "
+                    "store=<edge store path>")
+            self.orientation = orientation
+            a, b = orient_edges(np.asarray(src), np.asarray(dst), orientation)
+            self.a, self.b = a, b
+            self.nv = int(max(a.max(initial=-1), b.max(initial=-1))) + 1
+            self.indptr, self.indices = csr_from_edges(a, b, n_nodes=self.nv) \
+                if self.nv else (np.zeros(1, np.int64), np.zeros(0, np.int32))
+            self.device = device
+            self.source = InMemoryEdgeSource(self.indptr, self.indices,
+                                             device=device,
+                                             orientation=self.orientation)
+        if self.shard and self.indices is None:
+            warnings.warn(
+                "sharded execution stages the store-backed neighbor stream "
+                "through host memory (one full sequential pass); for graphs "
+                "larger than host RAM pass shard=False to keep the "
+                "bounded-memory streaming path.", stacklevel=2)
+        if self.degree_bins and self.indices is None:
+            warnings.warn(
+                "degree_bins is ignored for store-backed engines (the "
+                "global binned layout needs the edge list in memory); the "
+                "streaming executor already pads per box-local max degree.",
+                stacklevel=2)
         self._npad = None
         self._npad_host = None
         self._bins = None
@@ -196,8 +327,12 @@ class TriangleEngine:
 
     @property
     def npad_host(self) -> np.ndarray:
+        """Global padded neighbor matrix — legacy accessor. The streaming
+        paths never touch this; building it for a store-backed graph pages
+        the whole neighbor stream in."""
         if self._npad_host is None:
-            self._npad_host = pad_neighbors(self.indptr, self.indices)
+            indptr, indices = self._resident_csr()
+            self._npad_host = pad_neighbors(indptr, indices)
         return self._npad_host
 
     @property
@@ -209,16 +344,26 @@ class TriangleEngine:
     @property
     def bins(self):
         if self._bins is None:
-            self._bins = pad_neighbors_binned(self.indptr, self.indices)
+            indptr, indices = self._resident_csr()
+            self._bins = pad_neighbors_binned(indptr, indices)
         return self._bins
+
+    def _resident_csr(self) -> Tuple[np.ndarray, np.ndarray]:
+        if self.indices is not None:
+            return self.indptr, self.indices
+        _, indices = self.source.read_rows(0, self.nv - 1)
+        return self.indptr, indices
 
     # -- box planning ---------------------------------------------------------
 
     def plan(self) -> List[Tuple[int, int, int, int]]:
         """Box plan [(lx, hx, ly, hy)]; one unbounded box without a budget.
 
-        Cached per ``mem_words`` — the TrieArray build + probe/provision
-        pass is the expensive host-side step and the plan is deterministic.
+        Cached per ``mem_words`` — the probe/provision pass is the expensive
+        host-side step and the plan is deterministic. In-memory graphs use
+        the faithful TrieArray prober; store-backed graphs plan from the
+        resident degree index (``plan_boxes_from_degrees``) so planning
+        itself stays out-of-core.
         """
         if self._plan_cache is not None \
                 and self._plan_cache[0] == self.mem_words:
@@ -228,110 +373,182 @@ class TriangleEngine:
         return boxes
 
     def _plan_uncached(self) -> List[Tuple[int, int, int, int]]:
-        if len(self.a) == 0:
+        if self.nv == 0 or self.source.n_edges == 0:
             return []
         if self.mem_words is None:
             return [(0, self.nv - 1, 0, self.nv - 1)]
+        # hy < lx pruning is only sound when every edge has x < y (minmax)
+        prune = self.orientation == "minmax"
+        if self.indices is None:
+            from .boxing import plan_boxes_from_degrees
+            return plan_boxes_from_degrees(self.indptr, self.mem_words,
+                                           monotone_prune=prune)
         from .boxing import plan_boxes
         from .triearray import TrieArray
         ta = TrieArray.from_edges(self.a, self.b)
         if ta.words() <= self.mem_words:
             return [(0, self.nv - 1, 0, self.nv - 1)]
-        # hy < lx pruning is only sound when every edge has x < y (minmax)
-        return plan_boxes(ta, self.mem_words,
-                          monotone_prune=self.orientation == "minmax")
+        return plan_boxes(ta, self.mem_words, monotone_prune=prune)
 
-    def _box_edges(self, box) -> Tuple[np.ndarray, np.ndarray, int, int]:
+    def _box_edges(self, box, source=None) -> Tuple[np.ndarray, np.ndarray,
+                                                    int, int]:
         """In-box oriented edges (x ∈ [lx,hx], y ∈ [ly,hy]) + box widths."""
+        eu, ev, wx, wy, _slab = self._box_edges_full(box, source)
+        return eu, ev, wx, wy
+
+    def _box_edges_full(self, box, source=None):
+        """`_box_edges` plus the raw x-range slab, so a follow-up
+        ``StreamingExecutor.count_box`` can reuse the already-charged DMA
+        instead of re-reading the rows from the source."""
+        src = self.source if source is None else source
         lx, hx, ly, hy = box
         lx_, hx_ = max(lx, 0), min(hx, self.nv - 1)
         ly_, hy_ = max(ly, 0), min(hy, self.nv - 1)
         if hx_ < lx_ or hy_ < ly_:
-            return np.zeros(0, np.int64), np.zeros(0, np.int64), 0, 0
-        s0, s1 = self.indptr[lx_], self.indptr[hx_ + 1]
-        eu = np.repeat(np.arange(lx_, hx_ + 1),
-                       np.diff(self.indptr[lx_:hx_ + 2]))
-        ev = self.indices[s0:s1].astype(np.int64)
+            return (np.zeros(0, np.int64), np.zeros(0, np.int64), 0, 0, None)
+        ip, vals = src.read_rows(lx_, hx_)
+        eu = np.repeat(np.arange(lx_, hx_ + 1), np.diff(ip))
+        ev = vals.astype(np.int64)
         sel = (ev >= ly_) & (ev <= hy_)
-        return eu[sel], ev[sel], hx_ - lx_ + 1, hy_ - ly_ + 1
+        return (eu[sel], ev[sel], hx_ - lx_ + 1, hy_ - ly_ + 1, (ip, vals))
+
+    def _staged_source(self):
+        """Source for the *sharded* paths.
+
+        Sharded execution concatenates every box's edges on the host anyway
+        (the work-list is built before shard_map), so a store-backed graph
+        is staged through host memory with ONE sequential charged pass
+        (|E|/B block reads) instead of re-reading overlapping x-slabs per
+        box and again per shard gather. Bounded-memory execution is the
+        non-sharded streaming path.
+        """
+        if self.indices is not None:
+            return self.source
+        indptr, indices = self._resident_csr()   # one charged full read
+        return InMemoryEdgeSource(indptr, indices,
+                                  orientation=self.orientation)
 
     def _pick_backend(self, n_edges: int, wx: int, wy: int) -> str:
+        """Density dispatch: dense above the crossover, Pallas for the
+        mid-density band, binary-search otherwise.
+
+        The Pallas rotation-intersect kernel is only profitable compiled on
+        real TPU hardware, so 'auto' routes mid-density boxes (within 4x
+        below the dense crossover) to it **only when**
+        ``use_pallas_kernels`` is set (default: running on TPU). On CPU
+        backends the kernel would run in interpret mode — orders of
+        magnitude slower — so 'auto' never selects it there; force
+        ``backend="pallas"`` to test that path explicitly.
+        """
         if self.backend != "auto":
             return self.backend
         density = n_edges / max(1, wx * wy)
+        # feasibility of the dense one-hots: the executor compacts rows to
+        # the referenced endpoints (≤ min(width, edges) per side) and
+        # columns to the z values occurring in the slice (≤ min(V, slice
+        # neighbor entries)), so the cap is slice-scaled, not O(V) — dense
+        # dispatch stays live on graphs far larger than memory
+        est_rows = min(wx, n_edges) + min(wy, n_edges)
+        est_cols = min(self.nv, 16 * max(1, n_edges))
         if density > self.dense_threshold \
-                and (wx + wy) * self.nv <= _DENSE_WORDS_CAP:
+                and est_rows * est_cols <= _DENSE_WORDS_CAP:
             return "dense"
+        if self.use_pallas_kernels \
+                and density > self.dense_threshold / 4.0:
+            return "pallas"
         return "binary"
+
+    # -- executor / stats plumbing --------------------------------------------
+
+    def _make_executor(self, source=None) -> StreamingExecutor:
+        return StreamingExecutor(self.source if source is None else source,
+                                 pick_backend=self._pick_backend,
+                                 chunk=self.chunk,
+                                 prefetch_depth=self.prefetch_depth,
+                                 use_pallas_kernels=self.use_pallas_kernels,
+                                 dense_words_cap=_DENSE_WORDS_CAP,
+                                 stats=self.stats)
+
+    def _reset_stats(self, n_boxes: int) -> None:
+        self.stats = EngineStats(dense_threshold=self.dense_threshold,
+                                 n_boxes=n_boxes,
+                                 source="edgestore" if self.indices is None
+                                 else "memory")
+
+    def _io_mark(self):
+        if self.device is None:
+            return None
+        s = self.device.stats
+        return (s.block_reads, s.block_writes, s.word_reads)
+
+    def _io_collect(self, mark) -> None:
+        if self.device is None or mark is None:
+            return
+        s = self.device.stats
+        self.stats.block_reads = s.block_reads - mark[0]
+        self.stats.block_writes = s.block_writes - mark[1]
+        self.stats.word_reads = s.word_reads - mark[2]
 
     # -- counting -------------------------------------------------------------
 
     def count(self) -> int:
         boxes = self.plan()
-        self.stats = EngineStats(dense_threshold=self.dense_threshold,
-                                 n_boxes=len(boxes))
-        sparse: List[Tuple[np.ndarray, np.ndarray]] = []
+        self._reset_stats(len(boxes))
+        mark = self._io_mark()
+        if not self.shard:
+            ex = self._make_executor()
+            if self.degree_bins and self.indices is not None:
+                total = self._count_binned_boxes(boxes, ex)
+            else:
+                total = ex.run_count(boxes)
+            self._io_collect(mark)
+            return total
+        # sharded: dense/pallas boxes run locally through the executor;
+        # binary boxes are the data-parallel work-list. The neighbor stream
+        # is staged through host memory once (see _staged_source).
         total = 0
+        staged = self._staged_source()
+        ex = self._make_executor(source=staged)
+        sparse: List[Tuple[np.ndarray, np.ndarray]] = []
         for box in boxes:
-            eu, ev, wx, wy = self._box_edges(box)
+            eu, ev, wx, wy, slab = self._box_edges_full(box, staged)
             if len(eu) == 0:
                 continue
             be = self._pick_backend(len(eu), wx, wy)
-            if be == "dense":
-                total += self._count_dense_box(box, eu, ev, wx, wy)
-                self.stats.n_dense_boxes += 1
-            elif be == "pallas":
-                total += self._count_pallas_box(eu, ev)
-                self.stats.n_pallas_boxes += 1
+            if be in ("dense", "pallas"):
+                total += ex.count_box(box, x_slab=slab)
             else:
                 sparse.append((eu, ev))
                 self.stats.n_binary_boxes += 1
         if sparse:
-            if self.shard:
-                total += self._count_sharded(sparse)
+            if self.degree_bins and self.indices is not None:
+                total += self._count_sharded_binned(sparse)
             else:
-                # boxes hold disjoint edge sets and counting is additive, so
-                # a single chunked scan over the concatenation beats per-box
-                # dispatch (one compile, one device round-trip)
-                eu = np.concatenate([e for e, _ in sparse])
-                ev = np.concatenate([e for _, e in sparse])
-                if self.degree_bins:
-                    total += self._count_binned(eu, ev)
-                else:
-                    total += int(_count_chunked(
-                        self.npad, jnp.asarray(eu, jnp.int32),
-                        jnp.asarray(ev, jnp.int32), chunk=self.chunk))
+                total += self._count_sharded(sparse, staged)
+        self._io_collect(mark)
         return total
 
-    # dense MXU formulation: z spans the full node range inside a box, so
-    # the x-rows / y-rows carry all V columns and count = Σ mask ⊙ (Ax Ayᵀ)
-    def _count_dense_box(self, box, eu, ev, wx, wy) -> int:
-        from repro.kernels.triangle_dense.ops import triangle_count
-        lx_, ly_ = max(box[0], 0), max(box[2], 0)
-        hx_, hy_ = lx_ + wx - 1, ly_ + wy - 1
-        ax = np.zeros((wx, self.nv), dtype=np.float32)
-        ay = np.zeros((wy, self.nv), dtype=np.float32)
-        s0, s1 = self.indptr[lx_], self.indptr[hx_ + 1]
-        ru = np.repeat(np.arange(lx_, hx_ + 1),
-                       np.diff(self.indptr[lx_:hx_ + 2]))
-        ax[ru - lx_, self.indices[s0:s1]] = 1.0
-        t0, t1 = self.indptr[ly_], self.indptr[hy_ + 1]
-        rv = np.repeat(np.arange(ly_, hy_ + 1),
-                       np.diff(self.indptr[ly_:hy_ + 2]))
-        ay[rv - ly_, self.indices[t0:t1]] = 1.0
-        mask = np.zeros((wx, wy), dtype=np.float32)
-        mask[eu - lx_, ev - ly_] = 1.0
-        if self.use_pallas_kernels:  # MXU tiling pays off on real hardware
-            return int(triangle_count(ax, ay, mask, use_pallas=True))
-        # host fallback: a plain BLAS matmul beats per-box-shape XLA compiles
-        return int((mask * (ax @ ay.T)).sum())
-
-    def _count_pallas_box(self, eu, ev) -> int:
-        from repro.kernels.intersect.ops import intersect_count
-        npad_np = self.npad_host
-        out = intersect_count(npad_np[eu], npad_np[ev], use_pallas=True,
-                              interpret=not self.use_pallas_kernels)
-        return int(jnp.sum(out))
+    def _count_binned_boxes(self, boxes, ex: StreamingExecutor) -> int:
+        """Degree-binned single-host path: dense/pallas boxes stream through
+        the executor; binary boxes concatenate into the per-bin-pair probe
+        (padding waste is per-bin K, not global max degree)."""
+        total = 0
+        eus, evs = [], []
+        for box in boxes:
+            eu, ev, wx, wy, slab = self._box_edges_full(box)
+            if len(eu) == 0:
+                continue
+            be = self._pick_backend(len(eu), wx, wy)
+            if be in ("dense", "pallas"):
+                total += ex.count_box(box, x_slab=slab)
+            else:
+                eus.append(eu)
+                evs.append(ev)
+                self.stats.n_binary_boxes += 1
+        if eus:
+            total += self._count_binned(np.concatenate(eus),
+                                        np.concatenate(evs))
+        return total
 
     def _count_binned(self, eu, ev) -> int:
         """Degree-binned count: gather per (bin_u, bin_v) pair, probe the
@@ -362,21 +579,50 @@ class TriangleEngine:
         return balanced_box_schedule([len(eu) for eu, _ in edge_lists],
                                      len(self.devices))
 
-    def _count_sharded(self, edge_lists) -> int:
-        mesh = box_mesh(self.devices)
-        schedule = self._schedule(edge_lists)
-        eu_s, ev_s, ok_s = shard_box_edges(edge_lists, schedule,
-                                           pad_multiple=self.chunk)
+    def _gather(self, rows: np.ndarray, source=None) -> Tuple[np.ndarray,
+                                                              np.ndarray]:
+        """(deg, concat neighbor values) for sorted global rows, reading
+        contiguous runs from the source (charged when store-backed)."""
+        src = self.source if source is None else source
+        if len(rows) == 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.int32)
+        splits = np.flatnonzero(np.diff(rows) > 1) + 1
+        degs, vals = [], []
+        for run in np.split(rows, splits):
+            ip, v = src.read_rows(int(run[0]), int(run[-1]))
+            # runs are consecutive ids, so every row in [run0, run-1] is ours
+            degs.append(np.diff(ip))
+            vals.append(v)
+        return np.concatenate(degs), np.concatenate(vals)
+
+    def _shard_slices(self, edge_lists, schedule, pad_multiple, source=None):
+        out = shard_local_slices(edge_lists, schedule,
+                                 lambda rows: self._gather(rows, source),
+                                 pad_multiple=pad_multiple)
+        eu_s, ev_s, ok_s, npad_s, rows_s = out
         self.stats.n_shards = len(self.devices)
         self.stats.shard_edges = [int(x) for x in ok_s.sum(axis=1)]
+        self.stats.shard_rows = [int((r >= 0).sum()) for r in rows_s]
+        self.stats.local_npad_shape = tuple(npad_s.shape)
+        return eu_s, ev_s, ok_s, npad_s, rows_s
+
+    def _count_sharded(self, edge_lists, source=None) -> int:
+        """Data-parallel box execution with *non-replicated* neighbor data:
+        every shard receives only the renumbered rows its boxes touch, so
+        per-device memory is O(slice), not O(V·K)."""
+        mesh = box_mesh(self.devices)
+        schedule = self._schedule(edge_lists)
+        eu_s, ev_s, ok_s, npad_s, _rows = self._shard_slices(
+            edge_lists, schedule, pad_multiple=self.chunk, source=source)
         chunk = self.chunk
 
         @jax.jit
         @partial(shard_map, mesh=mesh,
-                 in_specs=(P(None, None), P("boxes", None),
+                 in_specs=(P("boxes", None, None), P("boxes", None),
                            P("boxes", None), P("boxes", None)),
                  out_specs=P("boxes"), check_rep=False)
         def run(npad, eu, ev, ok):
+            npad = npad[0]                      # this shard's local slice
             n_chunks = eu.shape[1] // chunk
 
             def body(carry, inp):
@@ -390,27 +636,127 @@ class TriangleEngine:
                  ok.reshape(n_chunks, chunk)))
             return total.reshape(1)
 
-        parts = run(self.npad, jnp.asarray(eu_s), jnp.asarray(ev_s),
-                    jnp.asarray(ok_s))
+        parts = run(jnp.asarray(npad_s), jnp.asarray(eu_s),
+                    jnp.asarray(ev_s), jnp.asarray(ok_s))
         return int(jnp.sum(parts))
+
+    def _count_sharded_binned(self, edge_lists) -> int:
+        """Sharded count through the degree-binned layout: one kernel per
+        (bin_u, bin_v) width pair, each shard holding only the bin rows its
+        edges reference. This wires ``pad_neighbors_binned`` into the
+        shard_map path — a hub row no longer sets the padded width of every
+        device array."""
+        row_bin, bins = self.bins
+        bin_pos = np.zeros(self.nv, dtype=np.int64)
+        for rows, _ in bins:
+            bin_pos[rows] = np.arange(len(rows))
+        mesh = box_mesh(self.devices)
+        schedule = self._schedule(edge_lists)
+        n_shards = len(schedule)
+        per_shard = []
+        for boxes in schedule:
+            if boxes:
+                eu = np.concatenate([edge_lists[b][0] for b in boxes])
+                ev = np.concatenate([edge_lists[b][1] for b in boxes])
+            else:
+                eu = ev = np.zeros(0, np.int64)
+            per_shard.append((eu, ev))
+        self.stats.n_shards = n_shards
+        self.stats.shard_edges = [len(eu) for eu, _ in per_shard]
+
+        pairs = set()
+        for eu, ev in per_shard:
+            if len(eu):
+                live = row_bin[ev] >= 0
+                pairs |= set(zip(row_bin[eu[live]].tolist(),
+                                 row_bin[ev[live]].tolist()))
+        total = 0
+        chunk = self.chunk
+
+        # one function object for every bin pair: jit keys retraces on the
+        # (ka, kb, ra, rb, L) shapes, so pairs sharing shapes share a trace
+        @jax.jit
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P("boxes", None, None), P("boxes", None, None),
+                           P("boxes", None), P("boxes", None),
+                           P("boxes", None)),
+                 out_specs=P("boxes"), check_rep=False)
+        def run(npa, npb, eu, ev, ok):
+            npa, npb = npa[0], npb[0]
+            n_chunks = eu.shape[1] // chunk
+
+            def body(carry, inp):
+                u, v, valid = inp
+                cnt = jax.vmap(_row_intersect_count)(npa[u], npb[v])
+                return carry + jnp.sum(cnt * valid), None
+
+            t, _ = jax.lax.scan(
+                body, jnp.int32(0),
+                (eu.reshape(n_chunks, chunk),
+                 ev.reshape(n_chunks, chunk),
+                 ok.reshape(n_chunks, chunk)))
+            return t.reshape(1)
+
+        for (i, j) in sorted(pairs):
+            npa_i, npb_j = bins[i][1], bins[j][1]
+            shard_data = []
+            for eu, ev in per_shard:
+                if len(eu) == 0:
+                    shard_data.append((np.zeros(0, np.int64),) * 4)
+                    continue
+                sel = (row_bin[eu] == i) & (row_bin[ev] == j)
+                eu_s, ev_s = eu[sel], ev[sel]
+                ur = np.unique(eu_s)
+                vr = np.unique(ev_s)
+                shard_data.append((eu_s, ev_s, ur, vr))
+            ra = max([len(d[2]) for d in shard_data] + [0]) + 1
+            rb = max([len(d[3]) for d in shard_data] + [0]) + 1
+            lmax = max([len(d[0]) for d in shard_data] + [1])
+            L = -(-lmax // chunk) * chunk
+            ka, kb = npa_i.shape[1], npb_j.shape[1]
+            npa = np.full((n_shards, ra, ka), SENTINEL, np.int32)
+            npb = np.full((n_shards, rb, kb), SENTINEL, np.int32)
+            eu_l = np.full((n_shards, L), ra - 1, np.int32)
+            ev_l = np.full((n_shards, L), rb - 1, np.int32)
+            ok_l = np.zeros((n_shards, L), np.int32)
+            for s, (eu_s, ev_s, ur, vr) in enumerate(shard_data):
+                if len(eu_s) == 0:
+                    continue
+                npa[s, :len(ur)] = npa_i[bin_pos[ur]]
+                npb[s, :len(vr)] = npb_j[bin_pos[vr]]
+                eu_l[s, :len(eu_s)] = np.searchsorted(ur, eu_s)
+                ev_l[s, :len(ev_s)] = np.searchsorted(vr, ev_s)
+                ok_l[s, :len(eu_s)] = 1
+
+            parts = run(jnp.asarray(npa), jnp.asarray(npb),
+                        jnp.asarray(eu_l), jnp.asarray(ev_l),
+                        jnp.asarray(ok_l))
+            total += int(jnp.sum(parts))
+        return total
 
     # -- listing --------------------------------------------------------------
 
     def list(self, capacity: Optional[int] = None) -> np.ndarray:
         """Enumerate all triangles; returns canonical sorted (m, 3) rows.
 
-        The output buffer is bounded (``capacity`` triangles per shard);
+        The output buffer is bounded (``capacity`` triangles per shard/box);
         because the kernels return the *exact* total alongside the buffer,
         overflow is detected and resolved by rescanning with the capacity
         doubled until everything fits (counting is cheap relative to
         materialization, so a rescan costs one extra pass).
         """
         boxes = self.plan()
-        self.stats = EngineStats(dense_threshold=self.dense_threshold,
-                                 n_boxes=len(boxes))
+        self._reset_stats(len(boxes))
+        mark = self._io_mark()
+        if not self.shard:
+            ex = self._make_executor()
+            tris = ex.run_list(boxes, capacity)
+            self._io_collect(mark)
+            return self._canonical(tris)
+        staged = self._staged_source()
         edge_lists = []
         for box in boxes:
-            eu, ev, _, _ = self._box_edges(box)
+            eu, ev, _, _ = self._box_edges(box, staged)
             if len(eu):
                 edge_lists.append((eu, ev))
         if not edge_lists:
@@ -418,55 +764,62 @@ class TriangleEngine:
         if capacity is None:
             m = sum(len(eu) for eu, _ in edge_lists)
             capacity = max(256, m)
-        cap = 1 << int(np.ceil(np.log2(max(2, capacity))))
+        cap = _pow2(max(2, capacity))
+        # the shard slices are identical across capacity rescans: build
+        # (and charge) them once, re-run only the kernel on overflow
+        mesh = box_mesh(self.devices)
+        chunk = min(self.chunk, 1024)
+        slices = self._shard_slices(edge_lists, self._schedule(edge_lists),
+                                    pad_multiple=chunk, source=staged)
         while True:
-            if self.shard:
-                tris, ok = self._list_sharded(edge_lists, cap)
-            else:
-                eu = jnp.asarray(np.concatenate([e for e, _ in edge_lists]),
-                                 jnp.int32)
-                ev = jnp.asarray(np.concatenate([e for _, e in edge_lists]),
-                                 jnp.int32)
-                total, buf = _list_chunked(self.npad, eu, ev, cap=cap,
-                                           chunk=min(self.chunk, 1024))
-                total = int(total)
-                ok = total <= cap
-                tris = np.asarray(buf[:min(total, cap)])
+            tris, ok = self._list_sharded(slices, cap, mesh, chunk)
             if ok:
                 break
             self.stats.n_rescans += 1
             cap *= 2
+        self._io_collect(mark)
+        return self._canonical(tris)
+
+    @staticmethod
+    def _canonical(tris: np.ndarray) -> np.ndarray:
+        if len(tris) == 0:
+            return np.zeros((0, 3), dtype=np.int64)
         tris = np.sort(np.asarray(tris, dtype=np.int64), axis=1)
         order = np.lexsort((tris[:, 2], tris[:, 1], tris[:, 0]))
         return tris[order]
 
-    def _list_sharded(self, edge_lists, cap: int):
-        mesh = box_mesh(self.devices)
-        schedule = self._schedule(edge_lists)
-        chunk = min(self.chunk, 1024)
-        eu_s, ev_s, ok_s = shard_box_edges(edge_lists, schedule,
-                                           pad_multiple=chunk)
-        self.stats.n_shards = len(self.devices)
-        self.stats.shard_edges = [int(x) for x in ok_s.sum(axis=1)]
+    def _list_sharded(self, slices, cap: int, mesh, chunk: int):
+        eu_s, ev_s, ok_s, npad_s, rows_s = slices
 
         @partial(jax.jit, static_argnames=())
         @partial(shard_map, mesh=mesh,
-                 in_specs=(P(None, None), P("boxes", None),
+                 in_specs=(P("boxes", None, None), P("boxes", None),
                            P("boxes", None), P("boxes", None)),
                  out_specs=(P("boxes"), P("boxes", None, None)),
                  check_rep=False)
         def run(npad, eu, ev, ok):
-            total, buf = _list_chunked(npad, eu[0], ev[0],
+            total, buf = _list_chunked(npad[0], eu[0], ev[0],
                                        cap=cap, chunk=chunk, valid=ok[0])
             return total.reshape(1), buf.reshape(1, cap, 3)
 
-        totals, bufs = run(self.npad, jnp.asarray(eu_s), jnp.asarray(ev_s),
-                           jnp.asarray(ok_s))
+        totals, bufs = run(jnp.asarray(npad_s), jnp.asarray(eu_s),
+                           jnp.asarray(ev_s), jnp.asarray(ok_s))
         totals = np.asarray(totals)
         if (totals > cap).any():
             return None, False
         bufs = np.asarray(bufs)
-        tris = np.concatenate([bufs[s, :totals[s]] for s in range(len(totals))])
+        parts = []
+        for s in range(len(totals)):
+            t = bufs[s, :totals[s]].astype(np.int64)
+            if len(t) == 0:
+                continue
+            t[:, 0] = rows_s[s][t[:, 0]]   # local row ids -> global vertices
+            t[:, 1] = rows_s[s][t[:, 1]]
+            parts.append(t)
+        tris = np.concatenate(parts) if parts \
+            else np.zeros((0, 3), np.int64)
+        if self.device is not None:
+            self.device.write_words(3 * len(tris))
         return tris, True
 
 

@@ -20,6 +20,17 @@ from dataclasses import dataclass, field
 import numpy as np
 
 
+def _nd_base(arr: np.ndarray) -> np.ndarray:
+    """Outermost *ndarray* owning the buffer. An ``np.memmap``'s base chain
+    bottoms out in a raw ``mmap.mmap`` (no array interface), so the walk
+    stops at the last ndarray — views of plain arrays and of memmaps alike
+    resolve to one canonical base."""
+    base = arr
+    while isinstance(base.base, np.ndarray):
+        base = base.base
+    return base
+
+
 @dataclass
 class IOStats:
     block_reads: int = 0
@@ -45,9 +56,7 @@ class BlockDevice:
     # -- registration -------------------------------------------------------
 
     def register(self, arr: np.ndarray) -> None:
-        base = arr.base if arr.base is not None else arr
-        while isinstance(base, np.ndarray) and base.base is not None:
-            base = base.base
+        base = _nd_base(arr)
         ptr = base.__array_interface__["data"][0]
         if ptr in self._regions:
             return
@@ -63,9 +72,7 @@ class BlockDevice:
                 self.register(a)
 
     def _word_addr(self, arr: np.ndarray, i: int) -> int:
-        base = arr.base if arr.base is not None else arr
-        while isinstance(base, np.ndarray) and base.base is not None:
-            base = base.base
+        base = _nd_base(arr)
         bptr = base.__array_interface__["data"][0]
         start, n, itemsize = self._regions[bptr]
         off_bytes = arr.__array_interface__["data"][0] - bptr

@@ -1,0 +1,254 @@
+"""Spillable edge store: memory-mapped chunked-CSR on disk (writer + reader).
+
+The paper's out-of-core setting (§1 "Model & Assumptions") keeps the edge
+relation on secondary storage and charges block I/Os for every word pulled
+into the memory budget M. This module is that storage layer for the
+streaming triangle engine:
+
+  * ``write_edge_store`` lays the oriented CSR graph out as *chunked CSR*:
+    the ``indices`` stream is split into fixed row-count chunks, each
+    aligned to a block boundary, with a chunk directory mapping chunk id to
+    its word offset. A reader can therefore fetch any vertex row range by
+    touching only the chunks that overlap it — the paper's contiguous slice
+    provisioning (Def. 6) as literal file reads.
+  * ``EdgeStore`` memory-maps the file and serves ``read_rows`` range reads.
+    Every read is charged to a ``core.iomodel.BlockDevice`` when one is
+    attached, so ``EngineStats`` reports *measured* block I/Os that
+    benchmarks compare against the Thm. 10 prediction.
+  * ``InMemoryEdgeSource`` wraps host (indptr, indices) arrays behind the
+    same interface, so the streaming executor is agnostic to where the
+    graph lives.
+
+Only the (V+1)-word ``indptr`` prefix array is kept resident (the paper's
+planner likewise assumes the index structure of E is probe-able); the
+neighbor stream itself is paged in per box.
+
+File layout (little-endian)::
+
+    [0:64)       header: magic 'RPRCSR01', version, orientation flag,
+                 n_nodes, n_edges, chunk_rows, n_chunks, align_words, k_max
+    [64:...)     indptr   int64[n_nodes + 1]
+    [...]        chunk directory int64[n_chunks + 1]  (word offsets)
+    [...]        indices  int32, per chunk, padded to align_words
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import numpy as np
+
+MAGIC = b"RPRCSR01"
+VERSION = 1
+
+_ORIENT_FLAGS = {"minmax": 0, "degree": 1, "raw": 2}
+_FLAG_ORIENTS = {v: k for k, v in _ORIENT_FLAGS.items()}
+
+_HEADER = np.dtype([
+    ("magic", "S8"), ("version", "<i4"), ("orient", "<i4"),
+    ("n_nodes", "<i8"), ("n_edges", "<i8"), ("chunk_rows", "<i8"),
+    ("n_chunks", "<i8"), ("align_words", "<i8"), ("k_max", "<i8"),
+])
+assert _HEADER.itemsize == 64
+
+
+# ---------------------------------------------------------------------------
+# writer
+# ---------------------------------------------------------------------------
+
+def write_edge_store_csr(path, indptr: np.ndarray, indices: np.ndarray, *,
+                         orientation: str = "raw", chunk_rows: int = 4096,
+                         align_words: int = 1024) -> str:
+    """Write a (sorted-row) CSR graph as a chunked-CSR edge store file."""
+    indptr = np.asarray(indptr, dtype=np.int64)
+    indices = np.asarray(indices, dtype=np.int32)
+    n_nodes = len(indptr) - 1
+    n_edges = len(indices)
+    chunk_rows = max(1, int(chunk_rows))
+    align_words = max(1, int(align_words))
+    n_chunks = max(1, -(-n_nodes // chunk_rows))
+    deg = np.diff(indptr)
+
+    offsets = np.zeros(n_chunks + 1, dtype=np.int64)
+    chunks = []
+    off = 0
+    for c in range(n_chunks):
+        r0, r1 = c * chunk_rows, min(n_nodes, (c + 1) * chunk_rows)
+        data = indices[indptr[r0]:indptr[r1]]
+        pad = (-len(data)) % align_words
+        if pad:
+            data = np.concatenate([data, np.zeros(pad, np.int32)])
+        offsets[c] = off
+        off += len(data)
+        chunks.append(data)
+    offsets[n_chunks] = off
+
+    hdr = np.zeros((), dtype=_HEADER)
+    hdr["magic"] = MAGIC
+    hdr["version"] = VERSION
+    hdr["orient"] = _ORIENT_FLAGS.get(orientation, _ORIENT_FLAGS["raw"])
+    hdr["n_nodes"] = n_nodes
+    hdr["n_edges"] = n_edges
+    hdr["chunk_rows"] = chunk_rows
+    hdr["n_chunks"] = n_chunks
+    hdr["align_words"] = align_words
+    hdr["k_max"] = int(deg.max(initial=0))
+
+    path = os.fspath(path)
+    with open(path, "wb") as f:
+        f.write(hdr.tobytes())
+        f.write(indptr.tobytes())
+        f.write(offsets.tobytes())
+        for data in chunks:
+            f.write(data.tobytes())
+    return path
+
+
+def write_edge_store(path, src: np.ndarray, dst: np.ndarray, *,
+                     orientation: str = "minmax", chunk_rows: int = 4096,
+                     align_words: int = 1024) -> str:
+    """Orient an undirected edge list and write it as an edge store.
+
+    The stored graph is the oriented DAG G* (paper §2.3), which is what the
+    triangle engine consumes; ``orientation`` is recorded in the header so
+    the engine can recover sound pruning rules when it opens the file.
+    """
+    from repro.core.lftj_jax import csr_from_edges, orient_edges
+
+    a, b = orient_edges(np.asarray(src), np.asarray(dst), orientation)
+    nv = int(max(a.max(initial=-1), b.max(initial=-1))) + 1
+    if nv:
+        indptr, indices = csr_from_edges(a, b, n_nodes=nv)
+    else:
+        indptr, indices = np.zeros(1, np.int64), np.zeros(0, np.int32)
+    return write_edge_store_csr(path, indptr, indices,
+                                orientation=orientation,
+                                chunk_rows=chunk_rows,
+                                align_words=align_words)
+
+
+# ---------------------------------------------------------------------------
+# readers (EdgeSource implementations)
+# ---------------------------------------------------------------------------
+
+class EdgeStore:
+    """Memory-mapped chunked-CSR reader, charging reads to a BlockDevice.
+
+    ``read_rows(lo, hi)`` returns ``(indptr_local, values)`` for vertex rows
+    ``lo..hi`` inclusive, where ``indptr_local`` is 0-based over the
+    returned ``values`` — the provisioning DMA of a contiguous x- or
+    y-slice. Chunk padding never reaches the caller.
+    """
+
+    def __init__(self, path, device=None):
+        self.path = os.fspath(path)
+        hdr = np.fromfile(self.path, dtype=_HEADER, count=1)[0]
+        if bytes(hdr["magic"]) != MAGIC:
+            raise ValueError(f"{self.path}: not an edge store (bad magic)")
+        if int(hdr["version"]) != VERSION:
+            raise ValueError(f"{self.path}: unsupported version {hdr['version']}")
+        self.n_nodes = int(hdr["n_nodes"])
+        self.n_edges = int(hdr["n_edges"])
+        self.chunk_rows = int(hdr["chunk_rows"])
+        self.n_chunks = int(hdr["n_chunks"])
+        self.align_words = int(hdr["align_words"])
+        self.k_max = int(hdr["k_max"])
+        self.orientation = _FLAG_ORIENTS.get(int(hdr["orient"]), "raw")
+
+        off = _HEADER.itemsize
+        # indptr is the resident index structure: V+1 words, read once
+        self.indptr = np.fromfile(self.path, dtype=np.int64,
+                                  count=self.n_nodes + 1, offset=off)
+        off += 8 * (self.n_nodes + 1)
+        self._chunk_off = np.fromfile(self.path, dtype=np.int64,
+                                      count=self.n_chunks + 1, offset=off)
+        off += 8 * (self.n_chunks + 1)
+        total_words = int(self._chunk_off[-1])
+        # an edgeless graph has no indices region at all — mmap of length
+        # max(1, 0) would point past EOF and raise
+        self._idx = np.memmap(self.path, dtype=np.int32, mode="r",
+                              offset=off, shape=(total_words,)) \
+            if total_words else np.zeros(0, np.int32)
+        self.device = None
+        if device is not None:
+            self.attach_device(device)
+
+    # -- device accounting ---------------------------------------------------
+
+    def attach_device(self, device) -> None:
+        """Register the on-disk indices region with a virtual block device."""
+        self.device = device
+        if device is not None and len(self._idx):
+            device.register(self._idx)
+
+    # -- EdgeSource interface ------------------------------------------------
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def words(self) -> int:
+        """Storage words of the neighbor stream (the paper's |R| unit)."""
+        return self.n_edges
+
+    def read_rows(self, lo: int, hi: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Neighbor data of vertex rows ``lo..hi`` inclusive (one DMA)."""
+        lo = max(0, int(lo))
+        hi = min(self.n_nodes - 1, int(hi))
+        if hi < lo:
+            return np.zeros(1, np.int64), np.zeros(0, np.int32)
+        parts = []
+        c0, c1 = lo // self.chunk_rows, hi // self.chunk_rows
+        for c in range(c0, c1 + 1):
+            r0 = max(lo, c * self.chunk_rows)
+            r1 = min(hi, (c + 1) * self.chunk_rows - 1)
+            base = int(self._chunk_off[c]) \
+                - int(self.indptr[c * self.chunk_rows])
+            s = base + int(self.indptr[r0])
+            e = base + int(self.indptr[r1 + 1])
+            if e > s:
+                if self.device is not None:
+                    self.device.read_range(self._idx, s, e)
+                parts.append(np.asarray(self._idx[s:e]))
+        vals = np.concatenate(parts) if parts \
+            else np.zeros(0, np.int32)
+        indptr_local = self.indptr[lo:hi + 2] - self.indptr[lo]
+        return indptr_local, vals
+
+
+class InMemoryEdgeSource:
+    """Host (indptr, indices) arrays behind the EdgeSource interface.
+
+    With a ``device`` attached the same block-I/O accounting applies as for
+    the on-disk store (useful for modeling runs); without one, reads are
+    free — pure in-memory execution.
+    """
+
+    def __init__(self, indptr: np.ndarray, indices: np.ndarray,
+                 device=None, orientation: str = "minmax"):
+        self.indptr = np.asarray(indptr, dtype=np.int64)
+        self.indices = np.asarray(indices, dtype=np.int32)
+        self.n_nodes = len(self.indptr) - 1
+        self.n_edges = len(self.indices)
+        self.orientation = orientation
+        self.device = device
+        if device is not None and self.n_edges:
+            device.register(self.indices)
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def words(self) -> int:
+        return self.n_edges
+
+    def read_rows(self, lo: int, hi: int) -> Tuple[np.ndarray, np.ndarray]:
+        lo = max(0, int(lo))
+        hi = min(self.n_nodes - 1, int(hi))
+        if hi < lo:
+            return np.zeros(1, np.int64), np.zeros(0, np.int32)
+        s, e = int(self.indptr[lo]), int(self.indptr[hi + 1])
+        if self.device is not None and e > s:
+            self.device.read_range(self.indices, s, e)
+        return self.indptr[lo:hi + 2] - self.indptr[lo], self.indices[s:e]

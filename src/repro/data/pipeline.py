@@ -19,15 +19,29 @@ class Prefetcher:
     def __init__(self, producer: Iterator, depth: int = 2):
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self.err: Optional[BaseException] = None
+        self._stop = False
 
         def run():
             try:
                 for item in producer:
-                    self.q.put(item)
+                    while not self._stop:
+                        try:
+                            self.q.put(item, timeout=0.1)
+                            break
+                        except queue.Full:
+                            continue
+                    if self._stop:
+                        break
             except BaseException as e:  # noqa: BLE001
                 self.err = e
             finally:
-                self.q.put(self._SENTINEL)
+                while True:
+                    try:
+                        self.q.put(self._SENTINEL, timeout=0.1)
+                        break
+                    except queue.Full:
+                        if self._stop:
+                            break
 
         self.thread = threading.Thread(target=run, daemon=True)
         self.thread.start()
@@ -42,3 +56,15 @@ class Prefetcher:
                 raise self.err
             raise StopIteration
         return item
+
+    def close(self) -> None:
+        """Stop the producer early (consumer abandons the stream).
+
+        The background thread stops at its next queue hand-off; already
+        queued items are discarded."""
+        self._stop = True
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass

@@ -11,8 +11,11 @@ GNN    : nodes/edges row-sharded over every axis (flattened); params
 DLRM   : embedding tables row(vocab)-sharded over model; MLPs replicated;
          batch over dp.
 Boxes  : the triangle engine shards the paper's box list over all devices
-         (``box_mesh`` + ``balanced_box_schedule`` + ``shard_box_edges``
-         below; consumed by ``repro.core.engine.TriangleEngine``).
+         (``box_mesh`` + ``balanced_box_schedule`` + ``shard_local_slices``
+         below; consumed by ``repro.core.engine.TriangleEngine``). Each
+         shard receives a *renumbered local* neighbor slice covering only
+         the rows its boxes reference — the padded neighbor matrix is
+         never replicated across the mesh.
 """
 
 from __future__ import annotations
@@ -297,37 +300,68 @@ def balanced_box_schedule(costs: Sequence[float],
     return shards
 
 
-def shard_box_edges(edge_lists: Sequence[Tuple[np.ndarray, np.ndarray]],
-                    schedule: Sequence[Sequence[int]],
-                    pad_multiple: int = 1,
-                    fill: int = 0) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Lay out per-box (eu, ev) edge lists device-major.
+def shard_local_slices(edge_lists: Sequence[Tuple[np.ndarray, np.ndarray]],
+                       schedule: Sequence[Sequence[int]],
+                       gather,
+                       pad_multiple: int = 1):
+    """Per-shard *renumbered local* neighbor slices — nothing replicated.
 
-    Returns ``(eu, ev, valid)`` of shape (n_shards, L) where L is the padded
-    max per-shard edge count (rounded up to ``pad_multiple``); padded slots
-    carry ``fill`` endpoints and valid == 0. Row s concatenates exactly the
-    boxes ``schedule[s]`` — the shard's independent work items.
+    For every shard, concatenates its boxes' (eu, ev) edges, collects the
+    distinct endpoint rows, fetches their neighbor lists via ``gather(rows)
+    -> (deg, concat_values)`` (source reads are charged there when the
+    graph is store-backed), and builds a box-local padded neighbor matrix.
+    Device arrays therefore scale with the shard's slice — rows×K_local —
+    instead of the global V×K_max matrix.
+
+    Returns ``(eu, ev, valid, npad, rows)``:
+
+      * ``eu``/``ev``/``valid``: (n_shards, L) local edge endpoints (row ids
+        into the shard's slice); padded slots reference the shard's
+        all-SENTINEL pad row and carry valid == 0;
+      * ``npad``: (n_shards, R, K) per-shard padded neighbor matrices, where
+        R = max referenced rows + 1 (pad row) and K = max referenced degree;
+      * ``rows``: (n_shards, R) local row id -> global vertex id (-1 pads).
     """
+    from repro.core.lftj_jax import SENTINEL
+
     n_shards = len(schedule)
     per_shard = []
     for boxes in schedule:
         if boxes:
             eu = np.concatenate([edge_lists[b][0] for b in boxes])
             ev = np.concatenate([edge_lists[b][1] for b in boxes])
+            rows = np.unique(np.concatenate([eu, ev]))
         else:
-            eu = np.zeros(0, np.int64)
-            ev = np.zeros(0, np.int64)
-        per_shard.append((eu, ev))
-    lmax = max([len(eu) for eu, _ in per_shard] + [1])
+            eu = ev = np.zeros(0, np.int64)
+            rows = np.zeros(0, np.int64)
+        deg, vals = gather(rows)
+        per_shard.append((eu, ev, rows, deg, vals))
+
+    R = max([len(rows) for _, _, rows, _, _ in per_shard] + [0]) + 1
+    K = max([int(deg.max(initial=1)) for _, _, _, deg, _ in per_shard] + [1])
+    lmax = max([len(eu) for eu, _, _, _, _ in per_shard] + [1])
     L = int(-(-lmax // pad_multiple) * pad_multiple)
-    eu_s = np.full((n_shards, L), fill, np.int32)
-    ev_s = np.full((n_shards, L), fill, np.int32)
+
+    npad_s = np.full((n_shards, R, K), SENTINEL, np.int32)
+    rows_s = np.full((n_shards, R), -1, np.int64)
+    eu_s = np.zeros((n_shards, L), np.int32)
+    ev_s = np.zeros((n_shards, L), np.int32)
     ok_s = np.zeros((n_shards, L), np.int32)
-    for s, (eu, ev) in enumerate(per_shard):
-        eu_s[s, :len(eu)] = eu
-        ev_s[s, :len(ev)] = ev
-        ok_s[s, :len(eu)] = 1
-    return eu_s, ev_s, ok_s
+    for s, (eu, ev, rows, deg, vals) in enumerate(per_shard):
+        pad_row = len(rows)            # all-SENTINEL: intersects to zero
+        eu_s[s, :] = pad_row
+        ev_s[s, :] = pad_row
+        rows_s[s, :len(rows)] = rows
+        if len(rows):
+            rr = np.repeat(np.arange(len(rows)), deg)
+            cc = np.arange(int(deg.sum())) \
+                - np.repeat(np.cumsum(deg) - deg, deg)
+            npad_s[s, rr, cc] = vals
+        if len(eu):
+            eu_s[s, :len(eu)] = np.searchsorted(rows, eu)
+            ev_s[s, :len(ev)] = np.searchsorted(rows, ev)
+            ok_s[s, :len(eu)] = 1
+    return eu_s, ev_s, ok_s, npad_s, rows_s
 
 
 # ---------------------------------------------------------------------------

@@ -153,6 +153,14 @@ def given(*arg_strategies, **kw_strategies):
                         f"falsifying example (hypothesis-compat shim, "
                         f"example {ran + 1}/{n}): args={drawn!r} "
                         f"kwargs={drawn_kw!r}") from exc
+            if ran == 0:
+                # real hypothesis raises Unsatisfiable here; silently
+                # passing would mask a test whose assume() rejects every
+                # drawn example
+                raise AssertionError(
+                    f"hypothesis-compat shim: assume() rejected all "
+                    f"{attempts} drawn examples of {fn.__qualname__}; "
+                    f"the test never ran")
             return None
 
         # Hide the drawn parameters from pytest's fixture resolution: the

@@ -72,6 +72,7 @@ ENGINE_CONFIGS = [
     dict(mem_words=200, degree_bins=True),
     dict(shard=True),
     dict(mem_words=200, shard=True),
+    dict(mem_words=200, shard=True, degree_bins=True),
     dict(backend="dense"),
     dict(backend="binary"),
     dict(orientation="degree"),
@@ -277,10 +278,96 @@ class TestPadding:
         assert binned_words < monolithic.size / 10
 
 
+class TestNonReplicatedSharding:
+    """Acceptance: the shard_map path ships per-shard *local* slices, never
+    the global (V, K) padded matrix."""
+
+    def test_local_slice_shapes_scale_with_shard(self):
+        src, dst = rmat_graph(256, 3000, seed=7)
+        want = reference_count(src, dst)
+        eng = TriangleEngine(src, dst, mem_words=400, shard=True)
+        assert eng.count() == want
+        shape = eng.stats.local_npad_shape
+        assert shape is not None
+        n_shards, R, K = shape
+        assert n_shards == len(eng.devices)
+        # the rows dimension is exactly the largest shard slice (+ pad row),
+        # by construction — not the vertex count
+        assert R == max(eng.stats.shard_rows) + 1
+        assert all(r <= eng.nv for r in eng.stats.shard_rows)
+        # K is the max degree among *referenced* rows, bounded by global K
+        deg = np.diff(eng.indptr)
+        assert 1 <= K <= int(deg.max())
+
+    def test_listing_local_slices_agree(self):
+        src, dst = er_graph(30, 0.25, seed=3)
+        eng = TriangleEngine(src, dst, mem_words=200, shard=True)
+        np.testing.assert_array_equal(eng.list(), reference_list(src, dst))
+        assert eng.stats.local_npad_shape is not None
+        assert eng.stats.local_npad_shape[1] <= eng.nv + 1
+
+    def test_binned_shard_path_agrees(self):
+        """degree_bins wired into shard_map: per-bin-pair kernels on
+        pad_neighbors_binned widths."""
+        hub = np.zeros(120, dtype=int)
+        leaves = np.arange(1, 121)
+        src = np.concatenate([hub, [1, 1, 2, 5, 5, 6]])
+        dst = np.concatenate([leaves, [2, 3, 3, 6, 7, 7]])
+        want = reference_count(src, dst)
+        eng = TriangleEngine(src, dst, mem_words=120, shard=True,
+                             degree_bins=True)
+        assert eng.count() == want
+
+
 class TestEngineConfig:
     def test_measured_crossover_is_sane(self):
         thr = measure_dense_crossover()
         assert 0.0 < thr <= 1.0
+
+    def test_crossover_persisted_to_json_cache(self, tmp_path, monkeypatch):
+        """Calibration is cached per (backend, device kind) in a JSON file;
+        REPRO_CROSSOVER_REMEASURE forces a fresh measurement."""
+        import json
+
+        from repro.core import engine as eng_mod
+
+        monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+        monkeypatch.delenv("REPRO_CROSSOVER_REMEASURE", raising=False)
+        eng_mod._crossover_memo.clear()
+        thr = measure_dense_crossover(nv=64, repeats=1)
+        cache_file = tmp_path / "crossover.json"
+        assert cache_file.exists()
+        data = json.loads(cache_file.read_text())
+        key = [k for k in data if k.endswith(":nv64")]
+        assert key and data[key[0]] == thr
+
+        # a planted cache value is trusted (no re-measurement)
+        data[key[0]] = 0.123
+        cache_file.write_text(json.dumps(data))
+        eng_mod._crossover_memo.clear()
+        assert measure_dense_crossover(nv=64, repeats=1) == 0.123
+
+        # ... unless a re-measure is forced, which overwrites the entry
+        monkeypatch.setenv("REPRO_CROSSOVER_REMEASURE", "1")
+        thr2 = measure_dense_crossover(nv=64, repeats=1)
+        assert 0.0 < thr2 <= 1.0
+        assert json.loads(cache_file.read_text())[key[0]] == thr2
+
+    def test_auto_dispatch_routes_midband_to_pallas_when_supported(self):
+        """Regression: 'auto' could only ever return dense/binary, leaving
+        the Pallas backend dead. With pallas support flagged, mid-density
+        boxes (within 4x below the dense crossover) now dispatch to it;
+        without support (CPU interpret mode) 'auto' still avoids it."""
+        src, dst = complete_graph(8)
+        tpu_like = TriangleEngine(src, dst, use_pallas_kernels=True)
+        # density 0.2 >> threshold -> dense regardless
+        assert tpu_like._pick_backend(200, 32, 32) == "dense"
+        # mid band: threshold/4 < 0.02 <= threshold
+        assert tpu_like._pick_backend(20, 32, 32) == "pallas"
+        # sparse: below the band
+        assert tpu_like._pick_backend(5, 100, 100) == "binary"
+        cpu = TriangleEngine(src, dst, use_pallas_kernels=False)
+        assert cpu._pick_backend(20, 32, 32) == "binary"
 
     def test_unknown_backend_rejected(self):
         with pytest.raises(ValueError):
@@ -312,6 +399,12 @@ for seed in (0, 5):
     got = eng.count()
     assert got == want, (seed, got, want)
     assert eng.stats.n_shards == 8
+    # non-replicated sharding: per-device arrays are the local slice
+    # (rows-referenced x local-K), never the global (V, K) matrix
+    shp = eng.stats.local_npad_shape
+    assert shp is not None and shp[0] == 8, shp
+    assert shp[1] == max(eng.stats.shard_rows) + 1, (shp, eng.stats.shard_rows)
+    assert shp[1] <= eng.nv
     tris = eng.list()
     assert len(tris) == want
     ref = np.sort(np.asarray(out, np.int64).reshape(-1, 3), axis=1)
