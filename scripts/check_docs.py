@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Docs link check (CI gate): relative links and code-path references in
+README.md and docs/*.md must resolve to files that actually exist.
+
+Two classes of reference are validated:
+
+1. **Markdown links** ``[text](target)`` whose target is relative (no URL
+   scheme, not a pure ``#fragment``): the target path — resolved against
+   the file containing the link — must exist.
+2. **Code-path references**: any ``src/repro/...``, ``benchmarks/...``,
+   ``tests/...``, ``examples/...`` or ``scripts/...`` path-like token
+   (in backticks, tables, or prose) must point at an existing file or
+   directory, so the paper→code map in docs/ARCHITECTURE.md can never
+   silently rot as modules move.
+
+Exit status 1 (with a listing) if any reference dangles. No third-party
+dependencies — runs on a bare Python.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images is unnecessary; they must resolve too
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# path-like code references rooted at well-known repo directories
+_CODE_REF = re.compile(
+    r"\b((?:src/repro|benchmarks|tests|examples|scripts|docs)"
+    r"(?:/[A-Za-z0-9_.\-]+)+)")
+_SCHEME = re.compile(r"^[a-z][a-z0-9+.\-]*:", re.IGNORECASE)
+
+
+def doc_files() -> list:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    for m in _MD_LINK.finditer(text):
+        target = m.group(1)
+        if _SCHEME.match(target) or target.startswith("#"):
+            continue                      # external URL / in-page anchor
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            errors.append(f"{path.relative_to(REPO)}: broken link ({target})")
+    for m in _CODE_REF.finditer(text):
+        ref = m.group(1).rstrip(".")
+        if not (REPO / ref).exists():
+            errors.append(
+                f"{path.relative_to(REPO)}: dangling code reference ({ref})")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for f in doc_files():
+        errors.extend(check_file(f))
+    if errors:
+        print(f"{len(errors)} dangling doc reference(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs ok: {len(doc_files())} files, all references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

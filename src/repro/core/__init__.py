@@ -5,7 +5,7 @@ from .leapfrog import (Atom, LeapfrogJoin, LeapfrogTriejoin, TrieIterator,
                        lftj_triangle_count, triangle_query_atoms)
 from .boxing import (BoxedLFTJ, BoxingConfig, BoxStats, boxed_triangle_count,
                      plan_boxes, plan_boxes_from_degrees)
-from .executor import BoxSlice, StreamingExecutor
+from .executor import BoxSlice, SliceCache, StreamingExecutor
 from .iomodel import BlockDevice, CountingReader, IOStats
 from .lftj_jax import (csr_from_edges, orient_edges, pad_neighbors,
                        pad_neighbors_binned, triangle_count_boxed_vectorized,
@@ -29,5 +29,5 @@ __all__ = [
     "count_triangles", "list_triangles", "adversarial_graph",
     "pad_neighbors_binned", "EngineStats", "TriangleEngine", "engine_count",
     "engine_list", "measure_dense_crossover", "plan_boxes_from_degrees",
-    "BoxSlice", "StreamingExecutor",
+    "BoxSlice", "SliceCache", "StreamingExecutor",
 ]

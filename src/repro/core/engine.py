@@ -22,13 +22,25 @@ per-device memory scales with the box slice, not the graph. With
 ``degree_bins=True`` the shard path runs one kernel per degree-bin pair on
 ``pad_neighbors_binned``-width matrices.
 
+With ``cache_words > 0`` the source is wrapped in an LRU
+``core.executor.SliceCache``: row blocks that adjacent boxes re-read
+(same-stripe x-slabs, shared y-slices) are served from host memory instead
+of re-charging the block device, so ``EngineStats.block_reads`` drops while
+counts stay identical. ``TriangleEngine.ingest`` closes the remaining gap
+to "graphs larger than RAM": it builds the store itself with bounded
+memory (``data.edgestore.EdgeStoreWriter`` external-sort ingest).
+
 Usage::
 
     eng = TriangleEngine(src, dst, mem_words=1 << 16)   # in-memory
     eng = TriangleEngine(store="graph.csr", mem_words=1 << 16)  # out-of-core
+    eng = TriangleEngine.ingest("graph.csr", batch_iter,         # bounded-
+                                ingest_budget_words=1 << 20,     # memory
+                                mem_words=1 << 16,               # ingest
+                                cache_words=1 << 14)
     n   = eng.count()
     tri = eng.list()          # (n, 3) canonical (min, mid, max) rows
-    eng.stats                 # boxes, backends, shards, block I/Os
+    eng.stats                 # boxes, backends, shards, cache, block I/Os
 """
 
 from __future__ import annotations
@@ -52,7 +64,7 @@ from repro.data.edgestore import EdgeStore, InMemoryEdgeSource
 from repro.parallel.sharding import (balanced_box_schedule, box_mesh,
                                      shard_local_slices)
 
-from .executor import StreamingExecutor, _pow2
+from .executor import SliceCache, StreamingExecutor, _pow2
 from .iomodel import BlockDevice
 from .lftj_jax import (SENTINEL, _count_chunked, _count_rows_chunked,
                        _list_chunked, _row_intersect_count, csr_from_edges,
@@ -66,7 +78,17 @@ _DENSE_WORDS_CAP = 64_000_000
 
 @dataclass
 class EngineStats:
-    """What one ``count()`` / ``list()`` call actually executed."""
+    """What one ``count()`` / ``list()`` call actually executed.
+
+    The engine resets this on every ``count()`` / ``list()`` entry and
+    fills it as the run proceeds, so after a call it is a faithful record
+    of *that* run: the box plan size, the backend mix the density dispatch
+    chose, shard shapes, streaming working-set peaks, slice-cache hits, and
+    the block I/Os measured on the attached ``iomodel.BlockDevice`` (the
+    numbers ``benchmarks/outofcore.py`` compares against the paper's
+    Thm. 10 bound). All counters are plain ints/lists — cheap to snapshot
+    or serialize.
+    """
 
     n_boxes: int = 0
     n_dense_boxes: int = 0
@@ -85,10 +107,20 @@ class EngineStats:
     block_reads: int = 0
     block_writes: int = 0
     word_reads: int = 0
+    # LRU slice cache (cache_words > 0): hits skip the device entirely,
+    # so they show up as *missing* block_reads relative to a cache-off run
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_hit_words: int = 0
     # sharded-path device array shapes (non-replicated slices)
     local_npad_shape: Optional[Tuple[int, int, int]] = None
     shard_rows: List[int] = field(default_factory=list)
     source: str = "memory"
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
 
     def as_info(self) -> dict:
         """Legacy info dict (triangle_count_boxed_vectorized compat)."""
@@ -218,6 +250,13 @@ class TriangleEngine:
         ``io_block_words``, cache sized to the memory budget); ``None``
         for in-memory runs (no accounting).
     mem_words : memory budget for the box planner; ``None`` = one box.
+    cache_words : LRU slice-cache budget (``core.executor.SliceCache``),
+        split out of the overall host budget: plan with ``mem_words`` and
+        spend ``cache_words`` *on top* caching row blocks that adjacent
+        boxes re-read (same-stripe x-slabs, shared y-slices). Keeping it a
+        separate knob leaves the box plan unchanged, so cache-on vs
+        cache-off runs are directly comparable; total host footprint is
+        ``mem_words + cache_words``. 0 disables the cache.
     orientation : 'minmax' (paper §2.3) or 'degree' (√|E| out-degree cap).
         Store-backed graphs carry their orientation in the file header.
     backend : 'auto' (density dispatch), or force 'binary' / 'dense' /
@@ -244,6 +283,7 @@ class TriangleEngine:
                  device: Optional[BlockDevice] = None,
                  io_block_words: int = 4096,
                  mem_words: Optional[int] = None,
+                 cache_words: int = 0,
                  orientation: str = "minmax",
                  backend: str = "auto",
                  dense_threshold=0.05,
@@ -305,6 +345,11 @@ class TriangleEngine:
             self.source = InMemoryEdgeSource(self.indptr, self.indices,
                                              device=device,
                                              orientation=self.orientation)
+        self.cache_words = int(cache_words)
+        self._slice_cache: Optional[SliceCache] = None
+        if self.cache_words > 0:
+            self._slice_cache = SliceCache(self.source, self.cache_words)
+            self.source = self._slice_cache
         if self.shard and self.indices is None:
             warnings.warn(
                 "sharded execution stages the store-backed neighbor stream "
@@ -351,8 +396,61 @@ class TriangleEngine:
     def _resident_csr(self) -> Tuple[np.ndarray, np.ndarray]:
         if self.indices is not None:
             return self.indptr, self.indices
-        _, indices = self.source.read_rows(0, self.nv - 1)
+        # whole-graph staging read: bypass the slice cache — one sequential
+        # pass can't benefit from it and would churn the entire LRU
+        src = self._slice_cache.source if self._slice_cache is not None \
+            else self.source
+        _, indices = src.read_rows(0, self.nv - 1)
         return self.indptr, indices
+
+    # -- streaming ingest ------------------------------------------------------
+
+    @classmethod
+    def ingest(cls, store_path, edges, *,
+               orientation: str = "minmax",
+               chunk_rows: int = 4096,
+               align_words: int = 1024,
+               ingest_budget_words: int = 1 << 22,
+               prefetch_batches: bool = True,
+               **engine_kw) -> "TriangleEngine":
+        """Stream undirected edges into a chunked-CSR store, bounded-memory,
+        and return a store-backed engine over it.
+
+        ``edges`` is either an iterable of ``(src, dst)`` array batches
+        (e.g. a generator parsing a file too big for RAM) or a single
+        ``(src, dst)`` pair of arrays (sliced into batches internally).
+        The batches flow through ``data.edgestore.EdgeStoreWriter``: spill
+        runs under ``ingest_budget_words`` (4-byte words), then an external
+        merge — peak ingest allocations stay ~2x the budget plus the O(V)
+        degree index, so the graph never has to fit in RAM, *including*
+        during ingest. With ``prefetch_batches`` the producer runs one
+        batch ahead on a ``data.pipeline.Prefetcher`` thread, overlapping
+        batch parsing with sort-and-spill.
+
+        Remaining keyword arguments (``mem_words``, ``cache_words``,
+        ``backend``, ...) are forwarded to the ``TriangleEngine``
+        constructor for the returned engine.
+        """
+        from repro.data.edgestore import EdgeStoreWriter
+        from repro.data.pipeline import Prefetcher, edge_batches
+
+        if isinstance(edges, tuple) and len(edges) == 2 \
+                and np.ndim(edges[0]) == 1:
+            edges = edge_batches(*edges)
+        writer = EdgeStoreWriter(store_path, orientation=orientation,
+                                 chunk_rows=chunk_rows,
+                                 align_words=align_words,
+                                 budget_words=ingest_budget_words)
+        it = Prefetcher(iter(edges), depth=1) if prefetch_batches \
+            else iter(edges)
+        try:
+            with writer:
+                for src, dst in it:
+                    writer.add_edges(src, dst)
+        finally:
+            if isinstance(it, Prefetcher):
+                it.close()
+        return cls(store=writer.path, **engine_kw)
 
     # -- box planning ---------------------------------------------------------
 
@@ -476,18 +574,25 @@ class TriangleEngine:
                                  else "memory")
 
     def _io_mark(self):
+        cache = self._slice_cache
+        cm = (cache.hits, cache.misses, cache.hit_words) if cache else None
         if self.device is None:
-            return None
+            return (None, cm)
         s = self.device.stats
-        return (s.block_reads, s.block_writes, s.word_reads)
+        return ((s.block_reads, s.block_writes, s.word_reads), cm)
 
     def _io_collect(self, mark) -> None:
-        if self.device is None or mark is None:
-            return
-        s = self.device.stats
-        self.stats.block_reads = s.block_reads - mark[0]
-        self.stats.block_writes = s.block_writes - mark[1]
-        self.stats.word_reads = s.word_reads - mark[2]
+        io_mark, cm = mark
+        if self.device is not None and io_mark is not None:
+            s = self.device.stats
+            self.stats.block_reads = s.block_reads - io_mark[0]
+            self.stats.block_writes = s.block_writes - io_mark[1]
+            self.stats.word_reads = s.word_reads - io_mark[2]
+        if self._slice_cache is not None and cm is not None:
+            cache = self._slice_cache
+            self.stats.cache_hits = cache.hits - cm[0]
+            self.stats.cache_misses = cache.misses - cm[1]
+            self.stats.cache_hit_words = cache.hit_words - cm[2]
 
     # -- counting -------------------------------------------------------------
 

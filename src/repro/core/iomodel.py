@@ -37,9 +37,14 @@ class IOStats:
     block_writes: int = 0
     word_reads: int = 0
     probes: int = 0
+    # words a host-side cache above the device served *without* issuing a
+    # read (core.executor.SliceCache hits) — the device's counters stay
+    # honest, and the saved traffic is still visible in one place
+    cache_served_words: int = 0
 
     def reset(self):
         self.block_reads = self.block_writes = self.word_reads = self.probes = 0
+        self.cache_served_words = 0
 
 
 class BlockDevice:
@@ -108,6 +113,11 @@ class BlockDevice:
     def write_words(self, n_words: int) -> None:
         """Append-only output stream (counts ceil(n/B) over time)."""
         self.stats.block_writes += (n_words + self.B - 1) // self.B
+
+    def serve_from_cache(self, n_words: int) -> None:
+        """Record ``n_words`` served by a cache layer above the device —
+        traffic that would have been ``read_range`` calls without it."""
+        self.stats.cache_served_words += n_words
 
     def clear_cache(self) -> None:
         self._cache.clear()

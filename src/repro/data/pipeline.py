@@ -1,11 +1,39 @@
-"""Double-buffered host prefetcher: overlaps host batch prep with device
-compute (the standard input-pipeline pattern on TPU hosts)."""
+"""Host-side input pipeline: prefetching and edge batching.
+
+Two consumers share this module:
+
+* the **streaming executor** (``core.executor``) wraps its per-box slice
+  materialization in a ``Prefetcher`` so host DMA overlaps device compute;
+* the **ingest path** (``TriangleEngine.ingest`` ->
+  ``data.edgestore.EdgeStoreWriter``) wraps the edge-batch producer in a
+  depth-1 ``Prefetcher`` so reading/generating the next batch overlaps the
+  writer's sort-and-spill work, and uses ``edge_batches`` to slice big
+  in-memory arrays into bounded batches.
+"""
 
 from __future__ import annotations
 
 import queue
 import threading
 from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+
+def edge_batches(src, dst, batch_edges: int = 1 << 20) -> Iterator:
+    """Yield ``(src, dst)`` batches of at most ``batch_edges`` edges.
+
+    Convenience for feeding already-materialized arrays to the streaming
+    ingest path; each yielded pair is a view, so the generator itself
+    allocates nothing.
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    if len(src) != len(dst):
+        raise ValueError("src and dst differ in length")
+    batch_edges = max(1, int(batch_edges))
+    for i in range(0, len(src), batch_edges):
+        yield src[i:i + batch_edges], dst[i:i + batch_edges]
 
 
 class Prefetcher:

@@ -1,0 +1,266 @@
+"""Streaming bounded-memory ingest: equivalence, budget, cache accounting.
+
+Headline acceptance (ISSUE 3): the whole pipeline is bounded-memory end to
+end. ``EdgeStoreWriter`` builds the chunked-CSR store via two-pass
+external-sort ingest and its output is *byte-identical* to the in-memory
+``write_edge_store`` path; ingesting an edge list larger than the budget
+keeps peak allocations under ~2x the budget (plus the O(V) resident degree
+index); and the ``SliceCache`` strictly reduces measured block reads on the
+adjacent-box workload without changing any count.
+"""
+
+import os
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.core import BlockDevice, SliceCache, TriangleEngine
+from repro.data.edgestore import (EdgeStore, EdgeStoreWriter,
+                                  write_edge_store,
+                                  write_edge_store_streaming)
+from repro.data.graphs import random_graph, rmat_graph
+from repro.data.pipeline import edge_batches
+
+
+def er_graph(n, p, seed):
+    rng = np.random.default_rng(seed)
+    adj = np.triu(rng.random((n, n)) < p, k=1)
+    src, dst = np.nonzero(adj)
+    return src.astype(np.int64), dst.astype(np.int64)
+
+
+GRAPHS = [
+    ("er", er_graph(96, 0.3, seed=11)),
+    ("rmat", rmat_graph(512, 6000, seed=11)),
+    ("rand", random_graph(300, 4000, seed=11)),
+]
+
+
+# ---------------------------------------------------------------------------
+# streaming writer == in-memory writer, byte for byte
+# ---------------------------------------------------------------------------
+
+class TestStreamingWriterEquivalence:
+    @pytest.mark.parametrize("name,edges", GRAPHS, ids=[g[0] for g in GRAPHS])
+    @pytest.mark.parametrize("orientation", ["minmax", "degree"])
+    def test_byte_identical_to_in_memory_writer(self, tmp_path, name,
+                                                edges, orientation):
+        src, dst = edges
+        # duplicates, reversals and self-loops must dedup identically
+        src2 = np.concatenate([src, dst, src[:50], np.arange(20)])
+        dst2 = np.concatenate([dst, src, dst[:50], np.arange(20)])
+        p_mem = write_edge_store(tmp_path / "mem.csr", src2, dst2,
+                                 orientation=orientation,
+                                 chunk_rows=19, align_words=16)
+        p_str = write_edge_store_streaming(
+            tmp_path / "str.csr", edge_batches(src2, dst2, batch_edges=501),
+            orientation=orientation, chunk_rows=19, align_words=16,
+            budget_words=2048)
+        assert p_mem != p_str
+        with open(p_mem, "rb") as a, open(p_str, "rb") as b:
+            assert a.read() == b.read()
+
+    def test_empty_graph_byte_identical(self, tmp_path):
+        p_mem = write_edge_store(tmp_path / "mem.csr",
+                                 np.zeros(0, int), np.zeros(0, int))
+        p_str = write_edge_store_streaming(tmp_path / "str.csr", iter([]))
+        with open(p_mem, "rb") as a, open(p_str, "rb") as b:
+            assert a.read() == b.read()
+
+    def test_count_and_list_equivalence(self, tmp_path):
+        """Counts/listings from an ingested store match the in-memory
+        engine — the store itself is equivalent, not just byte-compatible."""
+        src, dst = rmat_graph(256, 3000, seed=3)
+        eng_mem = TriangleEngine(src, dst, mem_words=200)
+        eng_ing = TriangleEngine.ingest(
+            tmp_path / "g.csr", (src, dst), chunk_rows=32, align_words=16,
+            ingest_budget_words=1024, mem_words=200)
+        assert eng_ing.count() == eng_mem.count()
+        np.testing.assert_array_equal(eng_ing.list(), eng_mem.list())
+
+    def test_writer_rejects_mismatched_batches_and_bad_ids(self, tmp_path):
+        w = EdgeStoreWriter(tmp_path / "g.csr")
+        with pytest.raises(ValueError, match="length"):
+            w.add_edges(np.arange(3), np.arange(4))
+        with pytest.raises(ValueError, match="ids"):
+            w.add_edges(np.asarray([-1]), np.asarray([2]))
+        w.add_edges(np.asarray([0, 1]), np.asarray([1, 2]))
+        w.finalize()
+        with pytest.raises(RuntimeError, match="finalized"):
+            w.add_edges(np.asarray([0]), np.asarray([1]))
+
+    def test_failed_merge_leaves_no_partial_store(self, tmp_path, monkeypatch):
+        """A pass-2 failure (disk full, ...) must not leave a truncated
+        store masquerading as the real file, nor any spill debris."""
+        src, dst = rmat_graph(256, 3000, seed=2)
+        w = EdgeStoreWriter(tmp_path / "g.csr", budget_words=1024)
+
+        def boom(self, f):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(EdgeStoreWriter, "_merge", boom)
+        with pytest.raises(OSError, match="disk full"):
+            with w:
+                w.add_edges(src, dst)
+        assert os.listdir(tmp_path) == []     # no partial store, no runs
+
+    def test_spill_runs_cleaned_up(self, tmp_path):
+        src, dst = rmat_graph(256, 4000, seed=1)
+        w = EdgeStoreWriter(tmp_path / "g.csr", budget_words=1024)
+        w.add_edges(src, dst)
+        w.finalize()
+        assert w.n_spill_runs > 1            # the budget actually spilled
+        leftovers = [p for p in os.listdir(tmp_path)
+                     if p != "g.csr"]
+        assert leftovers == []
+
+
+# ---------------------------------------------------------------------------
+# bounded-memory ingest: edge list > budget, peak allocations ~2x budget
+# ---------------------------------------------------------------------------
+
+class TestIngestBudget:
+    def test_peak_allocations_bounded_by_budget(self, tmp_path):
+        """Acceptance: ingest a graph whose raw edge list exceeds the
+        budget; peak ingest allocations stay under ~2x the budget plus the
+        O(V) resident degree/index arrays, and the result is byte-identical
+        to the in-memory writer's."""
+        nv = 384
+        src, dst = er_graph(nv, 0.5, seed=7)
+        budget_words = 6000
+        budget_bytes = 4 * budget_words
+        edge_list_bytes = 16 * len(src)       # two int64 endpoints per edge
+        assert edge_list_bytes > 4 * budget_bytes   # the premise
+        batch = budget_words // 16            # ~56 B/edge transient per batch
+        writer = EdgeStoreWriter(tmp_path / "g.csr", chunk_rows=64,
+                                 align_words=32, budget_words=budget_words)
+        tracemalloc.start()
+        with writer:
+            for s, d in edge_batches(src, dst, batch_edges=batch):
+                writer.add_edges(s, d)
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        assert writer.n_spill_runs > 2
+        # 2x budget + the O(V) resident arrays (outdeg/indptr/offsets/
+        # transient bincount) + a small fixed python slack
+        allowed = 2 * budget_bytes + 48 * nv + 16384
+        assert peak < allowed, (peak, allowed)
+        p_mem = write_edge_store(tmp_path / "mem.csr", src, dst,
+                                 chunk_rows=64, align_words=32)
+        with open(p_mem, "rb") as a, open(tmp_path / "g.csr", "rb") as b:
+            assert a.read() == b.read()
+
+
+# ---------------------------------------------------------------------------
+# slice cache: fewer block reads, identical counts, honest accounting
+# ---------------------------------------------------------------------------
+
+class TestSliceCache:
+    def _store(self, tmp_path, seed=5):
+        src, dst = rmat_graph(512, 6000, seed=seed)
+        path = write_edge_store(tmp_path / "g.csr", src, dst,
+                                chunk_rows=64, align_words=32)
+        return path, src, dst
+
+    def test_cache_reduces_block_reads_same_counts(self, tmp_path):
+        """Acceptance: same workload (identical box plan), cache on vs off
+        -> strictly fewer block reads, identical triangle count, and the
+        hits show up in the engine + device accounting."""
+        path, src, dst = self._store(tmp_path)
+        mem = 400
+        off = TriangleEngine(store=path, mem_words=mem, io_block_words=64)
+        n_off = off.count()
+        on = TriangleEngine(store=path, mem_words=mem, io_block_words=64,
+                            cache_words=8 * mem)
+        n_on = on.count()
+        assert n_on == n_off == TriangleEngine(src, dst).count()
+        assert on.stats.n_boxes == off.stats.n_boxes      # same workload
+        assert on.stats.block_reads < off.stats.block_reads
+        assert on.stats.cache_hits > 0
+        assert 0.0 < on.stats.cache_hit_rate <= 1.0
+        assert on.stats.cache_hit_words > 0
+        # the avoided traffic is visible on the device's ledger
+        assert on.device.stats.cache_served_words >= on.stats.cache_hit_words
+
+    def test_cached_listing_identical(self, tmp_path):
+        path, _, _ = self._store(tmp_path, seed=6)
+        t_off = TriangleEngine(store=path, mem_words=400).list()
+        t_on = TriangleEngine(store=path, mem_words=400,
+                              cache_words=4096).list()
+        np.testing.assert_array_equal(t_on, t_off)
+
+    def test_cache_read_rows_matches_source(self, tmp_path):
+        """Every (lo, hi) window reassembles exactly, across hit/miss/
+        partial-edge paths and after evictions."""
+        path, _, _ = self._store(tmp_path, seed=8)
+        store = EdgeStore(path)
+        cache = SliceCache(EdgeStore(path), budget_words=512, block_rows=5)
+        rng = np.random.default_rng(0)
+        windows = [(0, store.n_nodes - 1), (0, 4), (3, 3), (17, 93)]
+        windows += [tuple(sorted(rng.integers(0, store.n_nodes, 2)))
+                    for _ in range(30)]
+        for lo, hi in windows:
+            ip_c, v_c = cache.read_rows(lo, hi)
+            ip_s, v_s = store.read_rows(lo, hi)
+            np.testing.assert_array_equal(ip_c, ip_s)
+            np.testing.assert_array_equal(v_c, v_s)
+        assert cache.hits > 0 and cache.misses > 0
+
+    def test_cache_budget_evicts(self, tmp_path):
+        path, _, _ = self._store(tmp_path, seed=9)
+        cache = SliceCache(EdgeStore(path), budget_words=256, block_rows=4)
+        cache.read_rows(0, 400)
+        assert cache._words <= 256 or len(cache._blocks) == 1
+
+    def test_cache_never_reads_more_than_uncached(self, tmp_path):
+        """The pass-through design guarantee: even with a thrashing tiny
+        budget, the cached engine never charges *more* word reads than the
+        uncached one."""
+        path, _, _ = self._store(tmp_path, seed=5)
+        mem = 400
+        off = TriangleEngine(store=path, mem_words=mem, io_block_words=64)
+        off.count()
+        tiny = TriangleEngine(store=path, mem_words=mem, io_block_words=64,
+                              cache_words=64)
+        tiny.count()
+        assert tiny.stats.word_reads <= off.stats.word_reads
+
+
+# ---------------------------------------------------------------------------
+# reader format checks fail loudly (docs/EDGESTORE_FORMAT.md contract)
+# ---------------------------------------------------------------------------
+
+class TestFormatChecks:
+    def test_version_mismatch_fails_loudly(self, tmp_path):
+        src, dst = er_graph(32, 0.3, seed=0)
+        path = write_edge_store(tmp_path / "g.csr", src, dst)
+        with open(path, "r+b") as f:
+            f.seek(8)                         # version field (after magic)
+            f.write((99).to_bytes(4, "little"))
+        with pytest.raises(ValueError, match="version 99"):
+            EdgeStore(path)
+
+    def test_truncated_header_fails(self, tmp_path):
+        p = tmp_path / "short.csr"
+        p.write_bytes(b"RPRCSR01")            # magic only, header cut off
+        with pytest.raises(ValueError, match="truncated header"):
+            EdgeStore(p)
+
+    def test_truncated_indices_fails(self, tmp_path):
+        src, dst = er_graph(32, 0.3, seed=0)
+        path = write_edge_store(tmp_path / "g.csr", src, dst)
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(size - 64)
+        with pytest.raises(ValueError, match="truncated indices"):
+            EdgeStore(path)
+
+    def test_corrupt_header_fails(self, tmp_path):
+        src, dst = er_graph(32, 0.3, seed=0)
+        path = write_edge_store(tmp_path / "g.csr", src, dst)
+        with open(path, "r+b") as f:
+            f.seek(16)                        # n_nodes field
+            f.write((-5).to_bytes(8, "little", signed=True))
+        with pytest.raises(ValueError, match="corrupt header"):
+            EdgeStore(path)
