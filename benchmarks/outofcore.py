@@ -109,12 +109,25 @@ def main(fast: bool = False) -> None:
                                        mem_words=mem, cache_words=mem)
                 cnt_c = eng_c.count()
                 assert cnt_c == cnt, (cnt_c, cnt)
+                # async scheduler cross-check: a cold workers=2 run must
+                # reproduce the count AND the serial run's measured word
+                # reads (the determinism contract of the parallel queue)
+                dev_p = BlockDevice(block_words=B,
+                                    cache_blocks=max(2, mem // B))
+                eng_p = TriangleEngine(store=path, device=dev_p,
+                                       mem_words=mem, workers=2)
+                cnt_p = eng_p.count()
+                assert cnt_p == cnt, (cnt_p, cnt)
+                assert eng_p.stats.block_reads == io, \
+                    (eng_p.stats.block_reads, io)
                 emit(f"ooc/{gname}/m{int(frac * 100)}", us,
                      f"io={io};pred={pred:.0f};ratio={io / max(1.0, pred):.2f};"
                      f"boxes={eng.stats.n_boxes};count={cnt};"
                      f"max_slice={eng.stats.max_slice_words};"
                      f"cached_io={eng_c.stats.block_reads};"
-                     f"hit_rate={eng_c.stats.cache_hit_rate:.2f}")
+                     f"hit_rate={eng_c.stats.cache_hit_rate:.2f};"
+                     f"par_io={eng_p.stats.block_reads};"
+                     f"par_util={eng_p.stats.worker_utilization:.2f}")
 
 
 if __name__ == "__main__":

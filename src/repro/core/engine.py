@@ -34,6 +34,8 @@ Usage::
 
     eng = TriangleEngine(src, dst, mem_words=1 << 16)   # in-memory
     eng = TriangleEngine(store="graph.csr", mem_words=1 << 16)  # out-of-core
+    eng = TriangleEngine(store="graph.csr", mem_words=1 << 16,
+                         workers=4)    # async box scheduler (same output)
     eng = TriangleEngine.ingest("graph.csr", batch_iter,         # bounded-
                                 ingest_budget_words=1 << 20,     # memory
                                 mem_words=1 << 16,               # ingest
@@ -70,7 +72,7 @@ from .lftj_jax import (SENTINEL, _count_chunked, _count_rows_chunked,
                        _list_chunked, _row_intersect_count, csr_from_edges,
                        orient_edges, pad_neighbors, pad_neighbors_binned)
 
-BACKENDS = ("auto", "binary", "dense", "pallas")
+BACKENDS = ("auto", "binary", "dense", "pallas", "host")
 
 # dense-path feasibility guard: one-hot words per box (slice-scaled estimate)
 _DENSE_WORDS_CAP = 64_000_000
@@ -94,10 +96,23 @@ class EngineStats:
     n_dense_boxes: int = 0
     n_binary_boxes: int = 0
     n_pallas_boxes: int = 0
+    n_host_boxes: int = 0
     n_shards: int = 1
     n_rescans: int = 0
     dense_threshold: float = 0.0
     shard_edges: List[int] = field(default_factory=list)
+    # async box scheduler (workers > 1): queue-wait/overlap/utilization
+    # telemetry plus the observed in-flight peaks (the budget the window
+    # promises to respect)
+    n_workers: int = 1
+    inflight_boxes: int = 0            # configured window (0 = serial run)
+    queue_wait_s: float = 0.0          # worker-seconds spent waiting
+    build_s: float = 0.0               # worker-seconds building slices
+    compute_s: float = 0.0             # worker-seconds in backends
+    overlap_s: float = 0.0             # busy-seconds hidden by overlap
+    worker_utilization: float = 0.0    # busy / (workers * wall)
+    max_inflight_boxes: int = 0        # peak resident materialized slices
+    max_inflight_words: int = 0        # peak resident raw slice words
     # streaming executor (out-of-core) accounting
     n_streamed_boxes: int = 0
     slice_words_read: int = 0          # raw CSR words DMA'd across all boxes
@@ -260,7 +275,10 @@ class TriangleEngine:
     orientation : 'minmax' (paper §2.3) or 'degree' (√|E| out-degree cap).
         Store-backed graphs carry their orientation in the file header.
     backend : 'auto' (density dispatch), or force 'binary' / 'dense' /
-        'pallas' for every box.
+        'pallas' / 'host' for every box ('host' is the pure-numpy
+        binary-search lane — the GIL-releasing backend the async
+        scheduler's worker threads scale with on CPU hosts, where XLA
+        serializes concurrent executions).
     dense_threshold : box edge-density above which 'auto' picks the dense
         MXU formulation; the string 'measured' uses the persisted
         calibration (``measure_dense_crossover``).
@@ -273,6 +291,20 @@ class TriangleEngine:
     chunk : edge-chunk length of the scan (peak memory O(chunk · K)).
     prefetch_depth : how many box slices the host builds ahead of the
         device (``data.pipeline.Prefetcher`` double-buffering).
+    workers : worker threads of the async box scheduler. 1 (default) is
+        the sequential oracle — one box in flight behind a Prefetcher.
+        With ``workers > 1`` the box work-queue drains LPT-first across a
+        thread pool (plan order when a slice cache is attached, preserving
+        the serial read stream); counts and listings are reduced in fixed
+        box order, so the output is identical to the ``workers=1`` run.
+        The spawned pool is clamped to the hardware parallelism
+        (``os.cpu_count()``): threads beyond the cores measurably thrash.
+    inflight_boxes : in-flight window of the async scheduler — at most
+        this many materialized slices resident at once (default
+        ``2 * workers``), with total resident raw words additionally
+        capped at ``inflight_boxes * mem_words`` when a budget is set.
+        Host memory of a parallel run is therefore bounded by the window,
+        not the box count.
     use_pallas_kernels : run kernels compiled (TPU) vs interpret; default
         only compiles on TPU.
     """
@@ -292,6 +324,8 @@ class TriangleEngine:
                  shard: str | bool = "auto",
                  chunk: int = 2048,
                  prefetch_depth: int = 2,
+                 workers: int = 1,
+                 inflight_boxes: Optional[int] = None,
                  use_pallas_kernels: Optional[bool] = None):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
@@ -300,6 +334,9 @@ class TriangleEngine:
         self.chunk = int(chunk)
         self.mem_words = mem_words
         self.prefetch_depth = int(prefetch_depth)
+        self.workers = max(1, int(workers))
+        self.inflight_boxes = max(1, int(inflight_boxes)) \
+            if inflight_boxes is not None else max(2, 2 * self.workers)
         if use_pallas_kernels is None:
             use_pallas_kernels = jax.default_backend() == "tpu"
         self.use_pallas_kernels = bool(use_pallas_kernels)
@@ -559,17 +596,26 @@ class TriangleEngine:
     # -- executor / stats plumbing --------------------------------------------
 
     def _make_executor(self, source=None) -> StreamingExecutor:
+        # total resident slice words of the parallel window are bounded by
+        # window-size × per-box budget (each planned slice is itself under
+        # mem_words, modulo pinned spill rows)
+        inflight_words = self.inflight_boxes * self.mem_words \
+            if self.mem_words is not None else None
         return StreamingExecutor(self.source if source is None else source,
                                  pick_backend=self._pick_backend,
                                  chunk=self.chunk,
                                  prefetch_depth=self.prefetch_depth,
                                  use_pallas_kernels=self.use_pallas_kernels,
                                  dense_words_cap=_DENSE_WORDS_CAP,
-                                 stats=self.stats)
+                                 stats=self.stats,
+                                 workers=self.workers,
+                                 inflight_boxes=self.inflight_boxes,
+                                 inflight_words=inflight_words)
 
     def _reset_stats(self, n_boxes: int) -> None:
         self.stats = EngineStats(dense_threshold=self.dense_threshold,
                                  n_boxes=n_boxes,
+                                 n_workers=self.workers,
                                  source="edgestore" if self.indices is None
                                  else "memory")
 
@@ -615,16 +661,27 @@ class TriangleEngine:
         staged = self._staged_source()
         ex = self._make_executor(source=staged)
         sparse: List[Tuple[np.ndarray, np.ndarray]] = []
+        heavy: List[Tuple[int, int, int, int]] = []
         for box in boxes:
             eu, ev, wx, wy, slab = self._box_edges_full(box, staged)
             if len(eu) == 0:
                 continue
             be = self._pick_backend(len(eu), wx, wy)
             if be in ("dense", "pallas"):
-                total += ex.count_box(box, x_slab=slab)
+                if self.workers > 1 \
+                        and getattr(staged, "device", None) is None:
+                    # the local heavy boxes consume the same async queue as
+                    # the non-sharded path; only when the staged source is
+                    # uncharged (else the queue's fresh x-slab read would
+                    # double-bill the DMA the slab reuse avoids)
+                    heavy.append(box)
+                else:
+                    total += ex.count_box(box, x_slab=slab)
             else:
                 sparse.append((eu, ev))
                 self.stats.n_binary_boxes += 1
+        if heavy:
+            total += ex.run_count(heavy)
         if sparse:
             if self.degree_bins and self.indices is not None:
                 total += self._count_sharded_binned(sparse)

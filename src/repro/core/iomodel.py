@@ -10,10 +10,19 @@ numpy views share memory with their base buffer, so registering the *base*
 array by data pointer makes every slice/view alias the correct device
 blocks automatically — provisioning reads of a TrieArraySlice are charged to
 the region of the source TrieArray, exactly like a DMA from disk.
+
+Thread safety: the async box scheduler (``core.executor``) charges reads and
+output writes from several worker threads against ONE shared device, so all
+accounting entry points (``register`` / ``touch`` / ``read_range`` /
+``write_words`` / ``serve_from_cache``) serialize on an internal lock — the
+``IOStats`` counters and the LRU frame list never tear under concurrency.
+The lock is uncontended in single-threaded runs (scalar LFTJ probing pays
+one fast acquire per ``touch``).
 """
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
@@ -57,19 +66,23 @@ class BlockDevice:
         self._next_word = 0
         self._cache: OrderedDict = OrderedDict()  # block id -> True
         self.stats = IOStats()
+        # all accounting serializes here: concurrent slice builders and
+        # listing writers share one device ledger (see module docstring)
+        self._lock = threading.Lock()
 
     # -- registration -------------------------------------------------------
 
     def register(self, arr: np.ndarray) -> None:
         base = _nd_base(arr)
         ptr = base.__array_interface__["data"][0]
-        if ptr in self._regions:
-            return
-        n_words = base.size
-        self._regions[ptr] = (self._next_word, n_words, base.itemsize)
-        # round region starts to block boundaries (file layout)
-        self._next_word += n_words
-        self._next_word = ((self._next_word + self.B - 1) // self.B) * self.B
+        with self._lock:
+            if ptr in self._regions:
+                return
+            n_words = base.size
+            self._regions[ptr] = (self._next_word, n_words, base.itemsize)
+            # round region starts to block boundaries (file layout)
+            self._next_word += n_words
+            self._next_word = ((self._next_word + self.B - 1) // self.B) * self.B
 
     def register_triearray(self, ta) -> None:
         for a in list(ta.val) + list(ta.idx):
@@ -97,30 +110,35 @@ class BlockDevice:
 
     def touch(self, arr: np.ndarray, i: int) -> None:
         """Random access to element i of a registered (view of an) array."""
-        self.stats.word_reads += 1
-        self._touch_block(self._word_addr(arr, i) // self.B)
+        with self._lock:
+            self.stats.word_reads += 1
+            self._touch_block(self._word_addr(arr, i) // self.B)
 
     def read_range(self, arr: np.ndarray, lo: int, hi: int) -> None:
         """Sequential read of arr[lo:hi] (slice provisioning DMA)."""
         if hi <= lo:
             return
-        a = self._word_addr(arr, lo) // self.B
-        b = self._word_addr(arr, hi - 1) // self.B
-        for blk in range(a, b + 1):
-            self._touch_block(blk)
-        self.stats.word_reads += hi - lo
+        with self._lock:
+            a = self._word_addr(arr, lo) // self.B
+            b = self._word_addr(arr, hi - 1) // self.B
+            for blk in range(a, b + 1):
+                self._touch_block(blk)
+            self.stats.word_reads += hi - lo
 
     def write_words(self, n_words: int) -> None:
         """Append-only output stream (counts ceil(n/B) over time)."""
-        self.stats.block_writes += (n_words + self.B - 1) // self.B
+        with self._lock:
+            self.stats.block_writes += (n_words + self.B - 1) // self.B
 
     def serve_from_cache(self, n_words: int) -> None:
         """Record ``n_words`` served by a cache layer above the device —
         traffic that would have been ``read_range`` calls without it."""
-        self.stats.cache_served_words += n_words
+        with self._lock:
+            self.stats.cache_served_words += n_words
 
     def clear_cache(self) -> None:
-        self._cache.clear()
+        with self._lock:
+            self._cache.clear()
 
 
 class CountingReader:

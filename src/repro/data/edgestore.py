@@ -493,6 +493,13 @@ class EdgeStore:
     ``lo..hi`` inclusive, where ``indptr_local`` is 0-based over the
     returned ``values`` — the provisioning DMA of a contiguous x- or
     y-slice. Chunk padding never reaches the caller.
+
+    Safe for concurrent ``read_rows`` calls from multiple threads (the
+    async box scheduler's slice builders): the reader holds no mutable
+    per-read state — ``indptr``, the chunk directory and the read-only
+    mmap are only ever read, the returned arrays are fresh copies that
+    never alias another call's result, and device charging serializes on
+    the ``BlockDevice``'s internal lock.
     """
 
     def __init__(self, path, device=None):
@@ -594,6 +601,9 @@ class EdgeStore:
                 if self.device is not None:
                     self.device.read_range(self._idx, s, e)
                 parts.append(np.asarray(self._idx[s:e]))
+        # concatenate copies out of the mmap even for a single part, so the
+        # caller's slice never aliases the file mapping (concurrent readers
+        # each get private buffers)
         vals = np.concatenate(parts) if parts \
             else np.zeros(0, np.int32)
         indptr_local = self.indptr[lo:hi + 2] - self.indptr[lo]

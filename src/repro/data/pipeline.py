@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Callable, Iterator, Optional
 
 import numpy as np
@@ -48,6 +49,7 @@ class Prefetcher:
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self.err: Optional[BaseException] = None
         self._stop = False
+        self._closed = False
 
         def run():
             try:
@@ -85,14 +87,26 @@ class Prefetcher:
             raise StopIteration
         return item
 
-    def close(self) -> None:
+    def close(self, timeout: float = 5.0) -> None:
         """Stop the producer early (consumer abandons the stream).
 
         The background thread stops at its next queue hand-off; already
-        queued items are discarded."""
+        queued items are discarded and the thread is joined, so a closed
+        prefetcher never leaks its producer. Idempotent: double-close (or
+        close after exhaustion) is a cheap no-op."""
         self._stop = True
-        try:
-            while True:
-                self.q.get_nowait()
-        except queue.Empty:
-            pass
+        if self._closed:
+            return
+        # drain until the producer exits: it may be blocked mid-put, so one
+        # drain pass is not enough to guarantee progress
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                while True:
+                    self.q.get_nowait()
+            except queue.Empty:
+                pass
+            self.thread.join(timeout=0.05)
+            if not self.thread.is_alive() or time.monotonic() > deadline:
+                break
+        self._closed = True

@@ -285,6 +285,19 @@ def box_mesh(devices: Optional[Sequence] = None) -> Mesh:
     return Mesh(np.asarray(devices), ("boxes",))
 
 
+def lpt_order(costs: Sequence[float]) -> List[int]:
+    """Box indices in Longest-Processing-Time-first order (descending cost,
+    ties broken by index so the order is deterministic).
+
+    This is the shared priority order of both box-parallel paths: the
+    shard_map schedule (``balanced_box_schedule`` hands boxes to shards in
+    this order) and the async streaming scheduler
+    (``core.executor.StreamingExecutor`` drains its work queue in this
+    order, so the long-pole box starts first and its device compute
+    overlaps every later slice build)."""
+    return sorted(range(len(costs)), key=lambda i: (-float(costs[i]), i))
+
+
 def balanced_box_schedule(costs: Sequence[float],
                           n_shards: int) -> List[List[int]]:
     """Greedy LPT: assign each box (descending cost) to the least-loaded
@@ -293,7 +306,7 @@ def balanced_box_schedule(costs: Sequence[float],
     estimates (in-box edge counts)."""
     shards: List[List[int]] = [[] for _ in range(max(1, n_shards))]
     loads = np.zeros(max(1, n_shards))
-    for i in sorted(range(len(costs)), key=lambda i: -costs[i]):
+    for i in lpt_order(costs):
         s = int(np.argmin(loads))
         shards[s].append(i)
         loads[s] += costs[i]

@@ -75,7 +75,10 @@ ENGINE_CONFIGS = [
     dict(mem_words=200, shard=True, degree_bins=True),
     dict(backend="dense"),
     dict(backend="binary"),
+    dict(backend="host"),
     dict(orientation="degree"),
+    dict(mem_words=200, workers=4),
+    dict(mem_words=200, workers=2, backend="host"),
 ]
 
 
@@ -317,6 +320,47 @@ class TestNonReplicatedSharding:
         eng = TriangleEngine(src, dst, mem_words=120, shard=True,
                              degree_bins=True)
         assert eng.count() == want
+
+
+class TestDegreeBinsFallbacks:
+    def test_store_backed_degree_bins_warns_once(self, tmp_path):
+        """Store-backed engines cannot honor degree_bins (the global
+        binned layout needs the edge list in memory): the knob must warn
+        exactly once — at construction — and never silently change the
+        result; count()/list() emit nothing further."""
+        import warnings
+
+        from repro.data.edgestore import write_edge_store
+
+        src, dst = rmat_graph(128, 1500, seed=3)
+        path = write_edge_store(tmp_path / "g.csr", src, dst)
+        with pytest.warns(UserWarning, match="degree_bins"):
+            eng = TriangleEngine(store=path, mem_words=200,
+                                 degree_bins=True)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            n = eng.count()
+            tris = eng.list()
+        assert [w for w in rec
+                if "degree_bins" in str(w.message)] == []
+        assert n == reference_count(src, dst)
+        assert len(tris) == n
+
+    def test_sharded_listing_unbinned_fallback_matches_binned_count(self):
+        """With shard=True + degree_bins=True the count runs the binned
+        per-bin-pair kernels while listing falls back to the unbinned
+        local-slice path — the two must agree exactly (same triangles,
+        same total)."""
+        hub = np.zeros(120, dtype=int)
+        leaves = np.arange(1, 121)
+        src = np.concatenate([hub, [1, 1, 2, 5, 5, 6]])
+        dst = np.concatenate([leaves, [2, 3, 3, 6, 7, 7]])
+        eng = TriangleEngine(src, dst, mem_words=120, shard=True,
+                             degree_bins=True)
+        n_binned = eng.count()
+        tris = eng.list()                    # unbinned fallback
+        assert len(tris) == n_binned
+        np.testing.assert_array_equal(tris, reference_list(src, dst))
 
 
 class TestEngineConfig:

@@ -11,9 +11,11 @@ adjacent-box workload without changing any count.
 
 import os
 import tracemalloc
+from collections import OrderedDict
 
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import BlockDevice, SliceCache, TriangleEngine
 from repro.data.edgestore import (EdgeStore, EdgeStoreWriter,
@@ -225,6 +227,99 @@ class TestSliceCache:
                               cache_words=64)
         tiny.count()
         assert tiny.stats.word_reads <= off.stats.word_reads
+
+
+# ---------------------------------------------------------------------------
+# slice-cache invariants under randomized access patterns (hypothesis)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cache_store(tmp_path_factory):
+    """One shared store for the property tests (module-scoped: hypothesis
+    replays many examples against it, and the graph itself is fixed)."""
+    src, dst = rmat_graph(512, 6000, seed=21)
+    path = tmp_path_factory.mktemp("cachestore") / "g.csr"
+    return str(write_edge_store(path, src, dst, chunk_rows=64,
+                                align_words=32))
+
+
+def _windows_strategy(nv):
+    pair = st.tuples(st.integers(0, nv - 1), st.integers(0, nv - 1))
+    return st.lists(pair.map(lambda p: (min(p), max(p))),
+                    min_size=1, max_size=25)
+
+
+class TestSliceCacheProperties:
+    NV = 512
+
+    @settings(max_examples=15, deadline=None)
+    @given(windows=_windows_strategy(NV), block_rows=st.integers(2, 16),
+           budget=st.integers(128, 2048))
+    def test_lru_eviction_order_matches_model(self, cache_store, windows,
+                                              block_rows, budget):
+        """The resident block set and its recency order track a reference
+        LRU model exactly: hits move-to-end, miss runs insert in block
+        order, eviction trims oldest-first past the word budget."""
+        store = EdgeStore(cache_store)
+        cache = SliceCache(EdgeStore(cache_store), budget_words=budget,
+                           block_rows=block_rows)
+        ip = store.indptr
+        br = cache.block_rows
+
+        def block_words(bid):
+            # interior blocks are always full: values + (br + 1) indptr
+            return int(ip[bid * br + br] - ip[bid * br]) + br + 1
+
+        model: OrderedDict = OrderedDict()
+        for lo, hi in windows:
+            ib0, ib1 = -(-lo // br), (hi + 1) // br - 1
+            cache.read_rows(lo, hi)
+            for bid in range(ib0, ib1 + 1):
+                if bid in model:
+                    model.move_to_end(bid)
+                else:
+                    model[bid] = block_words(bid)
+                    while sum(model.values()) > budget and len(model) > 1:
+                        model.popitem(last=False)
+            assert list(cache._blocks) == list(model), (lo, hi)
+        assert cache._words == sum(model.values())
+
+    @settings(max_examples=10, deadline=None)
+    @given(windows=_windows_strategy(NV), block_rows=st.integers(2, 16))
+    def test_hit_rate_monotone_in_cache_words(self, cache_store, windows,
+                                              block_rows):
+        """LRU inclusion: replaying one access pattern against growing
+        budgets (same block granularity) never loses hits."""
+        hits = []
+        for budget in (192, 768, 3072, 1 << 20):
+            cache = SliceCache(EdgeStore(cache_store), budget_words=budget,
+                               block_rows=block_rows)
+            for lo, hi in windows:
+                cache.read_rows(lo, hi)
+            hits.append(cache.hits)
+        assert hits == sorted(hits), hits
+
+    @settings(max_examples=10, deadline=None)
+    @given(windows=_windows_strategy(NV), block_rows=st.integers(2, 16),
+           budget=st.integers(64, 1024))
+    def test_cache_never_reads_more_than_uncached(self, cache_store,
+                                                  windows, block_rows,
+                                                  budget):
+        """Design guarantee under arbitrary access patterns: the cached
+        reader never charges more block or word reads than the uncached
+        one — worst case (zero reuse, thrashing budget) costs the same."""
+        dev_raw = BlockDevice(block_words=64, cache_blocks=8)
+        raw = EdgeStore(cache_store, device=dev_raw)
+        dev_c = BlockDevice(block_words=64, cache_blocks=8)
+        cached = SliceCache(EdgeStore(cache_store, device=dev_c),
+                            budget_words=budget, block_rows=block_rows)
+        for lo, hi in windows:
+            ip_r, v_r = raw.read_rows(lo, hi)
+            ip_c, v_c = cached.read_rows(lo, hi)
+            np.testing.assert_array_equal(v_c, v_r)
+            np.testing.assert_array_equal(ip_c, ip_r)
+        assert dev_c.stats.block_reads <= dev_raw.stats.block_reads
+        assert dev_c.stats.word_reads <= dev_raw.stats.word_reads
 
 
 # ---------------------------------------------------------------------------
