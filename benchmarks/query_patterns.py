@@ -1,0 +1,120 @@
+"""General query patterns: 4-clique + diamond throughput and measured
+block I/O vs the Thm. 13 rank-r envelope.
+
+For each pattern (4-clique rank 3, diamond rank 3 in its store-consistent
+order, triangle rank 2 as the anchor) the store-backed ``QueryEngine``
+runs cold at ≥ 2 memory budgets on an RMAT graph; measured block reads
+from the attached ``BlockDevice`` are compared against
+
+    pred = |I|^r / (M^{r-1} B) + K/B        (Thm. 13)
+
+with K = result tuples × arity words. The boxed engine must stay *within*
+the envelope (ratio ≤ 1 up to the bound's constant; the emitted ratio is
+the figure of merit CI tracks). Cross-checks per budget:
+
+* a ``workers=2`` run reproduces the count and the serial block reads
+  (the shared scheduler's determinism contract on the generic engine);
+* counts match the scalar LFTJ reference (``run_query``) once per graph.
+
+derived: io=<blocks>;pred=<blocks>;ratio=<x>;rank=<r>;boxes=<n>;
+         count=<results>;par_io=<blocks>;kernel_boxes=<n>
+
+``python -m benchmarks.query_patterns --smoke --json out.json`` runs the
+fast sizes standalone (the CI ``query`` job's configuration); via
+``benchmarks.run --smoke`` the same rows land in the main CI record.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from repro.core import BlockDevice, TrieArray, orient_edges, run_query
+from repro.data.edgestore import EdgeStore, write_edge_store
+from repro.data.graphs import rmat_graph
+from repro.query import QueryEngine, patterns, thm13_io_bound
+
+from .common import emit
+
+B = 64
+FRACS = (0.25, 0.50)           # >= 2 memory budgets (acceptance)
+# Thm. 13 is asymptotic — the envelope constant absorbs the per-dimension
+# slice re-reads the bound's O(·) hides. Measured ratios sit near 1 for
+# rank 2 and 2-3 for rank 3 on the smoke workload; 8x is the regression
+# tripwire, not a tight fit.
+ENVELOPE = 8.0
+
+# pattern name -> (query factory, store-consistent variable order)
+CASES = {
+    "triangle": (patterns.triangle, ("x", "y", "z")),
+    "four_clique": (patterns.four_clique, None),
+    "diamond": (patterns.diamond, ("x", "y", "z", "w")),
+}
+
+
+def main(fast: bool = False) -> None:
+    nv = 256 if fast else 768
+    ne = 2600 if fast else 9000
+    src, dst = rmat_graph(nv, ne, seed=0)
+    a, b = orient_edges(src, dst)
+    ta = TrieArray.from_edges(a, b)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "g.csr")
+        write_edge_store(path, src, dst, chunk_rows=64, align_words=B)
+        words = EdgeStore(path).words()
+        for name, (factory, order) in CASES.items():
+            q = factory()
+            ref = run_query(q, q.head, {"E": ta})
+            for frac in FRACS:
+                mem = max(4 * B, int(words * frac))
+                eng = QueryEngine(q, store=path, order=order, mem_words=mem,
+                                  io_block_words=B)
+                # ONE cold pass (Thm. 13 compares against empty LRU frames)
+                t0 = time.perf_counter()
+                cnt = eng.count()
+                us = (time.perf_counter() - t0) * 1e6
+                assert cnt == ref, (name, cnt, ref)
+                io = eng.stats.block_reads
+                r = eng.stats.rank
+                pred = thm13_io_bound(words, mem, B, r,
+                                      output_words=cnt * len(q.head))
+                assert io <= ENVELOPE * pred, \
+                    (name, frac, io, pred)   # the Thm. 13 envelope gate
+                # generic-engine determinism contract: a parallel cold run
+                # reproduces the count and the measured block reads
+                eng_p = QueryEngine(q, store=path, order=order,
+                                    mem_words=mem, io_block_words=B,
+                                    workers=2)
+                cnt_p = eng_p.count()
+                assert cnt_p == cnt, (name, cnt_p, cnt)
+                assert eng_p.stats.block_reads == io, \
+                    (name, eng_p.stats.block_reads, io)
+                emit(f"query/{name}/m{int(frac * 100)}", us,
+                     f"io={io};pred={pred:.0f};"
+                     f"ratio={io / max(1.0, pred):.3f};rank={r};"
+                     f"boxes={eng.stats.n_boxes};count={cnt};"
+                     f"par_io={eng_p.stats.block_reads};"
+                     f"kernel_boxes={eng.stats.n_kernel_boxes}")
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    from .common import collected_rows, reset_rows
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast sizes (the CI query job's configuration)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write emitted rows as JSON")
+    args = ap.parse_args()
+    reset_rows()
+    print("name,us_per_call,derived")
+    main(fast=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"suites": ["query"], "fast": bool(args.smoke),
+                       "rows": collected_rows()}, f, indent=2)
+        print(f"# wrote {args.json}")

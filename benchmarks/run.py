@@ -5,6 +5,7 @@
   fig11  boxed LFTJ vs specialized MGT         (benchmarks.lftj_vs_mgt)
   thm17  arboricity scaling of LFTJ-Δ          (benchmarks.arboricity_scaling)
   ooc    out-of-core engine I/O vs Thm. 10     (benchmarks.outofcore)
+  query  general patterns I/O vs Thm. 13       (benchmarks.query_patterns)
   pscale async scheduler speedup vs workers    (benchmarks.parallel_scaling)
   kernels Pallas kernels vs references          (benchmarks.kernel_bench)
   roofline per-cell roofline terms from dry-run (benchmarks.roofline)
@@ -39,8 +40,8 @@ def main() -> None:
         args.fast = True
 
     from . import (arboricity_scaling, boxing_overhead, kernel_bench,
-                   lftj_vs_mgt, outofcore, parallel_scaling, roofline,
-                   vanilla_vs_boxed)
+                   lftj_vs_mgt, outofcore, parallel_scaling, query_patterns,
+                   roofline, vanilla_vs_boxed)
     from .common import collected_rows, reset_rows
 
     suites = {
@@ -49,6 +50,7 @@ def main() -> None:
         "fig11": lftj_vs_mgt.main,
         "thm17": arboricity_scaling.main,
         "ooc": outofcore.main,
+        "query": query_patterns.main,
         "pscale": parallel_scaling.main,
         "kernels": kernel_bench.main,
         "roofline": roofline.main,
@@ -56,7 +58,7 @@ def main() -> None:
     if args.only:
         names = [args.only]
     elif args.smoke:
-        names = ["fig9", "fig11", "ooc"]
+        names = ["fig9", "fig11", "ooc", "query"]
     else:
         names = list(suites)
     reset_rows()

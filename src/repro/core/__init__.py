@@ -4,16 +4,17 @@ from .triearray import SPILL, TrieArray, TrieArraySlice
 from .leapfrog import (Atom, LeapfrogJoin, LeapfrogTriejoin, TrieIterator,
                        lftj_triangle_count, triangle_query_atoms)
 from .boxing import (BoxedLFTJ, BoxingConfig, BoxStats, boxed_triangle_count,
-                     plan_boxes, plan_boxes_from_degrees)
+                     greedy_degree_cuts, plan_boxes, plan_boxes_from_degrees)
 from .executor import BoxSlice, SliceCache, StreamingExecutor
 from .iomodel import BlockDevice, CountingReader, IOStats
 from .lftj_jax import (csr_from_edges, orient_edges, pad_neighbors,
                        pad_neighbors_binned, triangle_count_boxed_vectorized,
                        triangle_count_dense, triangle_count_vectorized)
 from .engine import (EngineStats, TriangleEngine, engine_count, engine_list,
-                     measure_dense_crossover)
+                     measure_dense_crossover, measure_pallas_crossover)
 from .mgt import mgt_triangle_count
-from .queries import Query, best_rank, build_indexes, rank_for_order, run_query
+from .queries import (Query, best_order, best_rank, build_indexes, rank,
+                      rank_for_order, reordered_index, run_query, validate)
 from .triangle import brute_force_count, count_triangles, list_triangles
 from .adversarial import adversarial_graph
 
@@ -29,5 +30,7 @@ __all__ = [
     "count_triangles", "list_triangles", "adversarial_graph",
     "pad_neighbors_binned", "EngineStats", "TriangleEngine", "engine_count",
     "engine_list", "measure_dense_crossover", "plan_boxes_from_degrees",
-    "BoxSlice", "SliceCache", "StreamingExecutor",
+    "BoxSlice", "SliceCache", "StreamingExecutor", "rank", "validate",
+    "best_order", "reordered_index", "greedy_degree_cuts",
+    "measure_pallas_crossover",
 ]

@@ -245,6 +245,76 @@ def _time(fn) -> float:
     return time.perf_counter() - t0
 
 
+def measure_pallas_crossover(nv: int = 256, repeats: int = 3,
+                             seed: int = 0) -> float:
+    """Lowest box density where the Pallas rotation-intersect kernel beats
+    the binary-search backend — the measured lower edge of the mid-density
+    'pallas band' (static default: dense crossover / 4).
+
+    Calibrated the same way as ``measure_dense_crossover`` and persisted
+    next to it in the same JSON cache (key suffix ``:pallas``), once per
+    (jax backend, device kind); ``REPRO_CROSSOVER_REMEASURE=1`` refreshes.
+    Off-TPU the kernel only runs in interpret mode — orders of magnitude
+    slower than any alternative — so the measurement short-circuits to 1.0
+    (band never active) without timing the interpreter; 'auto' dispatch
+    additionally gates the band on ``use_pallas_kernels``, so this value
+    only steers dispatch on real TPU hardware.
+    """
+    dev = jax.devices()[0]
+    key = (f"{jax.default_backend()}:{getattr(dev, 'device_kind', '?')}"
+           f":nv{nv}:pallas")
+    force = os.environ.get("REPRO_CROSSOVER_REMEASURE", "") not in ("", "0")
+    if not force:
+        if key in _crossover_memo:
+            return _crossover_memo[key]
+        cached = _crossover_load().get(key)
+        if isinstance(cached, (int, float)) and 0.0 < cached <= 1.0:
+            _crossover_memo[key] = float(cached)
+            return float(cached)
+    value = 1.0 if jax.default_backend() != "tpu" \
+        else _measure_pallas_crossover(nv, repeats, seed)
+    _crossover_memo[key] = value
+    data = _crossover_load()
+    data[key] = value
+    _crossover_store(data)
+    return value
+
+
+def _measure_pallas_crossover(nv: int, repeats: int, seed: int) -> float:
+    from repro.kernels.intersect.ops import intersect_count
+
+    rng = np.random.default_rng(seed)
+    densities = (0.005, 0.01, 0.02, 0.05, 0.10, 0.20)
+    crossover = 1.0
+    for d in densities:
+        adj = np.triu(rng.random((nv, nv)) < d, k=1)
+        src, dst = np.nonzero(adj)
+        if len(src) == 0:
+            continue
+        indptr, indices = csr_from_edges(src, dst, n_nodes=nv)
+        npad_h = pad_neighbors(indptr, indices)
+        npad = jnp.asarray(npad_h)
+        eu = jnp.asarray(src, jnp.int32)
+        ev = jnp.asarray(dst, jnp.int32)
+        a_rows = npad_h[src]
+        b_rows = npad_h[dst]
+
+        def t_binary():
+            _count_chunked(npad, eu, ev, chunk=2048).block_until_ready()
+
+        def t_pallas():
+            intersect_count(a_rows, b_rows, use_pallas=True,
+                            interpret=False).block_until_ready()
+
+        t_binary(); t_pallas()  # compile outside the timed region
+        tb = min(_time(t_binary) for _ in range(repeats))
+        tp = min(_time(t_pallas) for _ in range(repeats))
+        if tp < tb:
+            crossover = d
+            break
+    return crossover
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -282,6 +352,11 @@ class TriangleEngine:
     dense_threshold : box edge-density above which 'auto' picks the dense
         MXU formulation; the string 'measured' uses the persisted
         calibration (``measure_dense_crossover``).
+    pallas_threshold : lower edge of the mid-density band 'auto' routes to
+        the Pallas intersect kernel (only on TPU — see backend). Default
+        ``dense_threshold / 4``; the string 'measured' uses the persisted
+        calibration (``measure_pallas_crossover``, cached in the same
+        ``crossover.json`` as the dense crossover).
     degree_bins : bin vertices by degree (power-of-4 widths) so padding is
         per-bin instead of global K = max degree (skewed graphs). Requires
         the edge list in memory: store-backed engines ignore it (with a
@@ -319,6 +394,7 @@ class TriangleEngine:
                  orientation: str = "minmax",
                  backend: str = "auto",
                  dense_threshold=0.05,
+                 pallas_threshold=None,
                  degree_bins: bool = False,
                  devices: Optional[Sequence] = None,
                  shard: str | bool = "auto",
@@ -350,6 +426,13 @@ class TriangleEngine:
         if dense_threshold == "measured":
             dense_threshold = measure_dense_crossover()
         self.dense_threshold = float(dense_threshold)
+        # lower edge of the mid-density band 'auto' routes to the Pallas
+        # intersect kernel (TPU only): static crossover/4 by default,
+        # 'measured' uses the persisted calibration
+        if pallas_threshold == "measured":
+            pallas_threshold = measure_pallas_crossover()
+        self.pallas_threshold = self.dense_threshold / 4.0 \
+            if pallas_threshold is None else float(pallas_threshold)
 
         if store is not None:
             if src is not None or dst is not None:
@@ -568,8 +651,9 @@ class TriangleEngine:
         mid-density band, binary-search otherwise.
 
         The Pallas rotation-intersect kernel is only profitable compiled on
-        real TPU hardware, so 'auto' routes mid-density boxes (within 4x
-        below the dense crossover) to it **only when**
+        real TPU hardware, so 'auto' routes mid-density boxes (density
+        above ``pallas_threshold``, default dense crossover / 4) to it
+        **only when**
         ``use_pallas_kernels`` is set (default: running on TPU). On CPU
         backends the kernel would run in interpret mode — orders of
         magnitude slower — so 'auto' never selects it there; force
@@ -589,7 +673,7 @@ class TriangleEngine:
                 and est_rows * est_cols <= _DENSE_WORDS_CAP:
             return "dense"
         if self.use_pallas_kernels \
-                and density > self.dense_threshold / 4.0:
+                and density > self.pallas_threshold:
             return "pallas"
         return "binary"
 

@@ -324,6 +324,172 @@ class SliceCache:
         return self.hits / total if total else 0.0
 
 
+def run_box_queue(items: List, *, order: List[int],
+                  est_words: Callable[[object], int],
+                  fetch: Callable[[object], Tuple[object, int]],
+                  build: Callable[[object], object],
+                  work: Callable[[object], object],
+                  workers: int,
+                  inflight_items: int,
+                  inflight_words: Optional[int] = None):
+    """Drain a box work queue on a bounded worker pool (the PR-4 scheduler).
+
+    This is the shared queue machinery of every boxed executor in the repo
+    (the triangle ``StreamingExecutor`` and the generic
+    ``repro.query.QueryEngine``): a pool of ``workers`` threads (clamped to
+    the hardware parallelism and the item count) drains ``items`` in
+    ``order``, with the three per-item stages split so the determinism
+    contract holds for ANY workload:
+
+    * ``fetch(item) -> (payload, actual_words)`` — all *source reads* of
+      one item. Serialized in queue order behind the in-flight
+      (items, words) window, so the read stream — and every ledger derived
+      from it (``BlockDevice`` I/Os, ``SliceCache`` hit sequence) — is
+      identical to a serial walk of ``order``.
+    * ``build(payload) -> obj | None`` — pure host-side construction (no
+      source access); runs concurrently across workers. ``None`` skips the
+      item (empty box).
+    * ``work(obj) -> result`` — the backend; concurrent across workers.
+
+    Admission charges ``est_words(item)`` against the window up front and
+    corrects to the fetch's actual words once known; an item wider than the
+    whole window is admitted alone (pinned-spill rule) so the queue cannot
+    deadlock on it. A stage exception cancels the remaining queue, every
+    worker is joined, and the first error re-raises here.
+
+    Returns ``(results, telemetry)``: per-item results in *item order*
+    (``None`` for skipped items) for deterministic reduction, plus the
+    telemetry dict (wait/build/compute worker-seconds, in-flight peaks,
+    wall time, pool size) the caller folds into its stats object.
+    """
+    import os as _os
+
+    n = len(items)
+    results: List = [None] * n
+    max_boxes = max(1, int(inflight_items))
+    max_words = inflight_words
+    # the pool never exceeds the hardware parallelism: beyond it, extra
+    # runnable threads only thrash caches and the GIL (measured
+    # monotonic slowdown on 2-core hosts)
+    pool = max(1, min(workers, n, _os.cpu_count() or workers))
+    cond = threading.Condition()
+    state = {"next": 0, "building": False, "res_boxes": 0,
+             "res_words": 0, "err": None, "stop": False}
+    tele = {"wait": 0.0, "build": 0.0, "compute": 0.0,
+            "hi_boxes": 0, "hi_words": 0, "wall": 0.0, "pool": 0}
+
+    def loop():
+        try:
+            _loop_body()
+        except BaseException as e:  # noqa: BLE001 — never strand waiters
+            with cond:
+                if state["err"] is None:
+                    state["err"] = e
+                state["stop"] = True
+                state["building"] = False
+                cond.notify_all()
+
+    def _loop_body():
+        while True:
+            t0 = time.perf_counter()
+            with cond:
+                while True:
+                    if state["stop"] or state["next"] >= n:
+                        tele["wait"] += time.perf_counter() - t0
+                        return
+                    if not state["building"]:
+                        est = est_words(items[order[state["next"]]])
+                        fits = (state["res_boxes"] < max_boxes
+                                and (max_words is None
+                                     or state["res_words"] + est
+                                     <= max_words))
+                        # an item wider than the whole window (pinned
+                        # spill row) is admitted alone, or the queue
+                        # would deadlock on it
+                        if fits or state["res_boxes"] == 0:
+                            break
+                    cond.wait()
+                bi = order[state["next"]]
+                state["next"] += 1
+                state["building"] = True
+                state["res_boxes"] += 1
+                state["res_words"] += est
+                tele["wait"] += time.perf_counter() - t0
+                tele["hi_boxes"] = max(tele["hi_boxes"],
+                                       state["res_boxes"])
+            actual = 0
+            try:
+                t1 = time.perf_counter()
+                # serialized stage: only the source reads. build and work
+                # run outside the turnstile, concurrently across workers.
+                payload, actual = fetch(items[bi])
+                with cond:
+                    state["building"] = False
+                    state["res_words"] += actual - est
+                    tele["hi_words"] = max(tele["hi_words"],
+                                           state["res_words"])
+                    cond.notify_all()
+                obj = build(payload)
+                t3 = time.perf_counter()
+                with cond:
+                    tele["build"] += t3 - t1
+                if obj is not None:
+                    out = work(obj)
+                    with cond:
+                        tele["compute"] += time.perf_counter() - t3
+                    results[bi] = out
+                with cond:
+                    state["res_boxes"] -= 1
+                    state["res_words"] -= actual
+                    cond.notify_all()
+            except BaseException as e:  # noqa: BLE001
+                with cond:
+                    if state["err"] is None:
+                        state["err"] = e
+                    state["stop"] = True      # cancel remaining items
+                    state["building"] = False
+                    state["res_boxes"] -= 1
+                    state["res_words"] -= actual
+                    cond.notify_all()
+                return
+
+    t_start = time.perf_counter()
+    threads = [threading.Thread(target=loop, daemon=True,
+                                name=f"box-worker-{i}")
+               for i in range(pool)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    tele["wall"] = time.perf_counter() - t_start
+    tele["pool"] = len(threads)
+    if state["err"] is not None:
+        raise state["err"]
+    return results, tele
+
+
+def merge_queue_telemetry(stats, tele: dict, lock: threading.Lock,
+                          inflight_boxes: int) -> None:
+    """Fold one ``run_box_queue`` telemetry dict into a stats object that
+    carries the PR-4 scheduler fields (``EngineStats`` and
+    ``repro.query.QueryStats`` both do)."""
+    busy = tele["build"] + tele["compute"]
+    wall = tele["wall"]
+    with lock:
+        stats.n_workers = tele["pool"]
+        stats.inflight_boxes = inflight_boxes
+        stats.queue_wait_s += tele["wait"]
+        stats.build_s += tele["build"]
+        stats.compute_s += tele["compute"]
+        stats.overlap_s += max(0.0, busy - wall)
+        stats.worker_utilization = busy / (tele["pool"] * wall) \
+            if wall > 0 and tele["pool"] else 0.0
+        stats.max_inflight_boxes = max(stats.max_inflight_boxes,
+                                       tele["hi_boxes"])
+        stats.max_inflight_words = max(stats.max_inflight_words,
+                                       tele["hi_words"])
+
+
 class StreamingExecutor:
     """Pulls boxes from a work queue, materializes slices, runs backends.
 
@@ -640,6 +806,11 @@ class StreamingExecutor:
         return tris
 
     # -- async scheduler (workers > 1) ----------------------------------------
+    # The pool/queue machinery itself lives in the module-level
+    # ``run_box_queue`` so the generic ``repro.query.QueryEngine`` drains
+    # its n-dimensional box queue through the exact same turnstile (same
+    # serialized-fetch determinism contract, same in-flight window, same
+    # telemetry) — this class only supplies the triangle-specific stages.
 
     def _est_slice_words(self, box) -> int:
         """Raw CSR words ``_materialize`` will read for ``box``, estimated
@@ -660,158 +831,53 @@ class StreamingExecutor:
         return words
 
     def _queue_order(self, boxes: List) -> List[int]:
-        """Priority order the shared queue is drained in.
-
-        LPT-first (the shard schedule's order, ``sharding.lpt_order``) for
-        pure in-memory sources, where only makespan matters. With a
-        ``SliceCache`` or a charged ``BlockDevice`` attached the queue
-        folds back to plan order: adjacent boxes share row blocks in plan
-        order, and — because builds are serialized in queue order — this
-        keeps the device's LRU frame hits and the cache's hit/miss
-        *sequence* identical to the ``workers=1`` run (the determinism
-        contract the property tests pin; LPT order measured ~1.6x the
-        block reads on the out-of-core smoke workload).
+        """Priority order the shared queue is drained in — the
+        ``sharding.box_queue_order`` policy: LPT-first for pure in-memory
+        sources (only makespan matters), plan order when a ``SliceCache``
+        or charged ``BlockDevice`` is attached (adjacent boxes share row
+        blocks in plan order, and — because builds are serialized in queue
+        order — this keeps the device's LRU frame hits and the cache's
+        hit/miss *sequence* identical to the ``workers=1`` run; LPT order
+        measured ~1.6x the block reads on the out-of-core smoke workload).
         """
-        if isinstance(self.source, SliceCache) \
-                or getattr(self.source, "device", None) is not None:
-            return list(range(len(boxes)))
-        from repro.parallel.sharding import lpt_order
-        return lpt_order([self._est_slice_words(b) for b in boxes])
+        from repro.parallel.sharding import box_queue_order
+        ledger = isinstance(self.source, SliceCache) \
+            or getattr(self.source, "device", None) is not None
+        return box_queue_order([self._est_slice_words(b) for b in boxes],
+                               ledger_sensitive=ledger)
+
+    def _fetch_with_words(self, box) -> Tuple[object, int]:
+        """``run_box_queue`` fetch stage: the box's source reads + their
+        raw word count (the window-admission correction)."""
+        fetched = self._fetch(box)
+        return fetched, (fetched[-1] if fetched is not None else 0)
+
+    def _build_slice(self, fetched) -> Optional[BoxSlice]:
+        """``run_box_queue`` build stage: numpy compaction (no source
+        access); ``None`` drops empty boxes before the backend runs."""
+        slc = self._compact(fetched)
+        if slc is None or slc.n_edges == 0:
+            return None
+        self._note(slc)
+        return slc
 
     def _run_parallel(self, boxes: List, work: Callable) -> List:
-        """Run ``work(slc)`` for every box on the worker pool.
-
-        Returns per-box results in *plan order* (``None`` for empty boxes)
-        so callers reduce deterministically regardless of completion order.
-        Builds are serialized in queue order behind the in-flight budget;
-        a worker exception cancels the remaining queue, is re-raised here,
-        and every worker thread is joined before returning.
-        """
-        import os as _os
-
-        n = len(boxes)
-        order = self._queue_order(boxes)
-        results: List = [None] * n
-        max_boxes = self.inflight_boxes
-        max_words = self.inflight_words
-        # the pool never exceeds the hardware parallelism: beyond it, extra
-        # runnable threads only thrash caches and the GIL (measured
-        # monotonic slowdown on 2-core hosts)
-        pool = max(1, min(self.workers, n,
-                          _os.cpu_count() or self.workers))
-        cond = threading.Condition()
-        state = {"next": 0, "building": False, "res_boxes": 0,
-                 "res_words": 0, "err": None, "stop": False}
-        tele = {"wait": 0.0, "build": 0.0, "compute": 0.0,
-                "hi_boxes": 0, "hi_words": 0}
-
-        def loop():
-            try:
-                _loop_body()
-            except BaseException as e:  # noqa: BLE001 — never strand waiters
-                with cond:
-                    if state["err"] is None:
-                        state["err"] = e
-                    state["stop"] = True
-                    state["building"] = False
-                    cond.notify_all()
-
-        def _loop_body():
-            while True:
-                t0 = time.perf_counter()
-                with cond:
-                    while True:
-                        if state["stop"] or state["next"] >= n:
-                            tele["wait"] += time.perf_counter() - t0
-                            return
-                        if not state["building"]:
-                            est = self._est_slice_words(boxes[
-                                order[state["next"]]])
-                            fits = (state["res_boxes"] < max_boxes
-                                    and (max_words is None
-                                         or state["res_words"] + est
-                                         <= max_words))
-                            # a slice wider than the whole window (pinned
-                            # spill row) is admitted alone, or the queue
-                            # would deadlock on it
-                            if fits or state["res_boxes"] == 0:
-                                break
-                        cond.wait()
-                    bi = order[state["next"]]
-                    state["next"] += 1
-                    state["building"] = True
-                    state["res_boxes"] += 1
-                    state["res_words"] += est
-                    tele["wait"] += time.perf_counter() - t0
-                    tele["hi_boxes"] = max(tele["hi_boxes"],
-                                           state["res_boxes"])
-                actual = 0
-                try:
-                    t1 = time.perf_counter()
-                    # serialized stage: only the source reads. The numpy
-                    # compaction and the backend run outside the turnstile,
-                    # concurrently across workers.
-                    fetched = self._fetch(boxes[bi])
-                    t2 = time.perf_counter()
-                    actual = fetched[-1] if fetched is not None else 0
-                    with cond:
-                        state["building"] = False
-                        state["res_words"] += actual - est
-                        tele["hi_words"] = max(tele["hi_words"],
-                                               state["res_words"])
-                        cond.notify_all()
-                    slc = self._compact(fetched)
-                    t3 = time.perf_counter()
-                    with cond:
-                        tele["build"] += t3 - t1
-                    if slc is not None and slc.n_edges > 0:
-                        self._note(slc)
-                        out = work(slc)
-                        with cond:
-                            tele["compute"] += time.perf_counter() - t3
-                        results[bi] = out
-                    with cond:
-                        state["res_boxes"] -= 1
-                        state["res_words"] -= actual
-                        cond.notify_all()
-                except BaseException as e:  # noqa: BLE001
-                    with cond:
-                        if state["err"] is None:
-                            state["err"] = e
-                        state["stop"] = True      # cancel remaining boxes
-                        state["building"] = False
-                        state["res_boxes"] -= 1
-                        state["res_words"] -= actual
-                        cond.notify_all()
-                    return
-
-        t_start = time.perf_counter()
-        threads = [threading.Thread(target=loop, daemon=True,
-                                    name=f"box-worker-{i}")
-                   for i in range(pool)]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-        wall = time.perf_counter() - t_start
+        """Run ``work(slc)`` for every box on the shared worker pool
+        (``run_box_queue``): per-box results in *plan order* (``None`` for
+        empty boxes) so callers reduce deterministically regardless of
+        completion order."""
+        results, tele = run_box_queue(
+            boxes, order=self._queue_order(boxes),
+            est_words=self._est_slice_words,
+            fetch=self._fetch_with_words,
+            build=self._build_slice,
+            work=work,
+            workers=self.workers,
+            inflight_items=self.inflight_boxes,
+            inflight_words=self.inflight_words)
         if self.stats is not None:
-            busy = tele["build"] + tele["compute"]
-            with self._stats_lock:
-                s = self.stats
-                s.n_workers = len(threads)
-                s.inflight_boxes = max_boxes
-                s.queue_wait_s += tele["wait"]
-                s.build_s += tele["build"]
-                s.compute_s += tele["compute"]
-                s.overlap_s += max(0.0, busy - wall)
-                s.worker_utilization = busy / (len(threads) * wall) \
-                    if wall > 0 and threads else 0.0
-                s.max_inflight_boxes = max(s.max_inflight_boxes,
-                                           tele["hi_boxes"])
-                s.max_inflight_words = max(s.max_inflight_words,
-                                           tele["hi_words"])
-        if state["err"] is not None:
-            raise state["err"]
+            merge_queue_telemetry(self.stats, tele, self._stats_lock,
+                                  inflight_boxes=self.inflight_boxes)
         return results
 
     # -- public entry points --------------------------------------------------

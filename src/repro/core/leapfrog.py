@@ -266,6 +266,27 @@ def triangle_query_atoms() -> list:
     return [Atom("E", ("x", "y")), Atom("E", ("x", "z")), Atom("E", ("y", "z"))]
 
 
+def lftj_query_count(atoms: Sequence[Atom], var_order: Sequence[str],
+                     relations: dict, device=None,
+                     emit: Optional[Callable] = None) -> int:
+    """Scalar LFTJ over any consistent atom list, optionally charging every
+    element access to a ``core.iomodel.BlockDevice``.
+
+    The reference-altitude I/O measurement for general queries: registers
+    each relation's arrays on the device and routes all trie navigation
+    through a ``CountingReader``, so the measured block reads are the
+    vanilla (un-boxed) cost the Thm. 13 boxed bound is compared against
+    (``benchmarks/query_patterns.py``; ``repro.query.QueryEngine`` is the
+    production path)."""
+    reader = None
+    if device is not None:
+        for ta in relations.values():
+            device.register_triearray(ta)
+        reader = CountingReader(device)
+    j = LeapfrogTriejoin(atoms, list(var_order), relations, reader=reader)
+    return j.run(emit=emit)
+
+
 def lftj_triangle_count(edges_ta: TrieArray,
                         reader: Optional[CountingReader] = None,
                         emit: Optional[Callable] = None) -> int:

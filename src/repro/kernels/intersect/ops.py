@@ -34,3 +34,56 @@ def intersect_count(a, b, *, be: int = 256, use_pallas: bool = True,
     else:
         out = intersect_count_pallas(a, b, be=be, interpret=interpret)
     return out[:e]
+
+
+def _pad_rows(off: np.ndarray, vals: np.ndarray, pos: np.ndarray,
+              k: int) -> np.ndarray:
+    """(len(pos), k) SENTINEL-padded value rows gathered from compact CSR
+    (``off``/``vals``) at key positions ``pos``."""
+    off = np.asarray(off, dtype=np.int64)
+    deg = np.diff(off)[pos]
+    out = np.full((len(pos), k), SENTINEL, dtype=np.int32)
+    total = int(deg.sum())
+    if total:
+        idx = np.repeat(off[:-1][pos], deg) \
+            + np.arange(total, dtype=np.int64) \
+            - np.repeat(np.cumsum(deg) - deg, deg)
+        rr = np.repeat(np.arange(len(pos)), deg)
+        cc = np.arange(total, dtype=np.int64) \
+            - np.repeat(np.cumsum(deg) - deg, deg)
+        out[rr, cc] = vals[idx]
+    return out
+
+
+def intersect_count_rows(off_a, vals_a, pos_a, off_b, vals_b, pos_b, *,
+                         use_pallas: bool = True,
+                         interpret: bool | None = None,
+                         chunk: int = 8192) -> int:
+    """Σ_i |row_a(pos_a[i]) ∩ row_b(pos_b[i])| from two compact-CSR
+    relations — the generic QueryEngine's lowering of its innermost
+    two-variable leapfrog onto this kernel.
+
+    Rows are gathered host-side into SENTINEL-padded tiles and fed to
+    ``intersect_count`` in ``chunk``-row batches, so device memory is
+    O(chunk · K_box) regardless of the binding-frontier size. Returns the
+    total as a Python int (per-pair counts never leave the device loop).
+    """
+    import jax.numpy as jnp
+
+    pos_a = np.asarray(pos_a, dtype=np.int64)
+    pos_b = np.asarray(pos_b, dtype=np.int64)
+    if len(pos_a) == 0:
+        return 0
+    deg_a = np.diff(np.asarray(off_a, dtype=np.int64))
+    deg_b = np.diff(np.asarray(off_b, dtype=np.int64))
+    ka = int(deg_a[pos_a].max(initial=1))
+    kb = int(deg_b[pos_b].max(initial=1))
+    total = 0
+    for s in range(0, len(pos_a), chunk):
+        pa, pb = pos_a[s:s + chunk], pos_b[s:s + chunk]
+        a = _pad_rows(off_a, vals_a, pa, ka)
+        b = _pad_rows(off_b, vals_b, pb, kb)
+        out = intersect_count(a, b, use_pallas=use_pallas,
+                              interpret=interpret)
+        total += int(jnp.sum(out))
+    return total

@@ -298,6 +298,24 @@ def lpt_order(costs: Sequence[float]) -> List[int]:
     return sorted(range(len(costs)), key=lambda i: (-float(costs[i]), i))
 
 
+def box_queue_order(costs: Sequence[float],
+                    ledger_sensitive: bool) -> List[int]:
+    """Priority order a box work-queue is drained in — shared by the
+    triangle ``StreamingExecutor`` and the generic ``query.QueryEngine``.
+
+    ``ledger_sensitive=False`` (pure in-memory source): LPT-first — only
+    makespan matters, so the long-pole box starts first. With a slice
+    cache or a charged block device attached (``ledger_sensitive=True``)
+    the queue folds back to plan order: adjacent boxes share row blocks in
+    plan order, and because fetches are serialized in queue order this
+    keeps the device's LRU frame hits and the cache's hit/miss *sequence*
+    identical to the ``workers=1`` oracle (the determinism contract the
+    property tests pin)."""
+    if ledger_sensitive:
+        return list(range(len(costs)))
+    return lpt_order(costs)
+
+
 def balanced_box_schedule(costs: Sequence[float],
                           n_shards: int) -> List[List[int]]:
     """Greedy LPT: assign each box (descending cost) to the least-loaded

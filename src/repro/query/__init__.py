@@ -1,0 +1,24 @@
+"""General-purpose join subsystem: boxed, out-of-core, multi-worker LFTJ
+for arbitrary binary-atom conjunctive queries (paper §2 generalization).
+
+``QueryEngine`` executes any validated ``core.queries.Query`` — 4-cliques,
+diamonds, paths, cycles, the triangle as a special case — through the same
+out-of-core machinery as ``core.engine.TriangleEngine``: degree-index box
+planning under the Thm. 13 rank-r I/O bound (``planner``), per-atom slice
+streaming over ``EdgeSource``/``SliceCache``/``BlockDevice`` with the PR-4
+worker-pool scheduler (``executor``), and batched numpy/Pallas leapfrog
+inner loops (``vectorized``). ``patterns`` holds the canonical pattern
+queries.
+"""
+
+from . import patterns
+from .executor import QueryEngine, QueryStats, query_count
+from .planner import QueryPlan, plan_query_boxes, thm13_io_bound
+from .vectorized import AtomSlice, BoundAtom, VectorizedBoxJoin, \
+    build_atom_slice
+
+__all__ = [
+    "QueryEngine", "QueryStats", "query_count", "QueryPlan",
+    "plan_query_boxes", "thm13_io_bound", "patterns", "AtomSlice",
+    "BoundAtom", "VectorizedBoxJoin", "build_atom_slice",
+]

@@ -1,0 +1,650 @@
+"""QueryEngine: boxed, out-of-core, multi-worker LFTJ for conjunctive queries.
+
+The generic counterpart of ``core.engine.TriangleEngine``: any validated
+``core.queries.Query`` over *binary* relations (graph patterns: 4-cliques,
+diamonds, paths, cycles — and the triangle as a special case) executes
+through the same out-of-core machinery the triangle engine uses:
+
+* **planning** — ``query.planner.plan_query_boxes`` cuts the n-dimensional
+  variable space into boxes from the *resident degree indexes* alone
+  (never touching the neighbor streams), budgeted per Thm. 13's rank-r
+  bound. The triangle special case reproduces the triangle planner's boxes
+  cut for cut.
+* **fetching** — per box, each owned dimension's row ranges are read
+  through the relation's ``EdgeSource`` (``data.edgestore.EdgeStore`` on
+  disk, ``InMemoryEdgeSource`` in RAM, optionally behind a
+  ``core.executor.SliceCache``), with already-covered intervals deduped
+  (§5 slice sharing) and a full-conjunctive early exit: an atom whose
+  box-restricted slice is empty kills the box before further reads —
+  byte-for-byte the read stream ``TriangleEngine`` issues on the triangle
+  query, which is how ``tests/test_query_engine.py`` pins measured
+  ``block_reads`` equality.
+* **executing** — ``query.vectorized.VectorizedBoxJoin`` runs the batched
+  leapfrog over the per-atom slices (numpy ``searchsorted`` lanes that
+  release the GIL; innermost two-variable intersections optionally lower
+  onto the ``kernels/intersect`` Pallas op).
+* **scheduling** — boxes drain on the shared PR-4 worker pool
+  (``core.executor.run_box_queue``) under the same workers=1-oracle
+  determinism contract: serialized fetches in queue order, fixed box-order
+  reduction, in-flight (boxes, words) window.
+
+``TriangleEngine`` remains the specialized fast path; its golden counts
+are the QueryEngine's oracle in the test suite.
+
+Usage::
+
+    from repro.query import QueryEngine, patterns
+
+    eng = QueryEngine.from_graph(patterns.four_clique(), src, dst,
+                                 mem_words=1 << 16)
+    n   = eng.count()
+    eng = QueryEngine(patterns.diamond(), store="graph.csr",
+                      mem_words=1 << 16, workers=4)
+    rows = eng.list()              # (m, 4) bindings in head order
+    eng.stats                      # boxes, rank, I/O, cache, telemetry
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.executor import (SliceCache, merge_queue_telemetry,
+                                 run_box_queue)
+from repro.core.iomodel import BlockDevice
+from repro.core.leapfrog import Atom
+from repro.core.lftj_jax import csr_from_edges, orient_edges
+from repro.core.queries import Query, is_consistent, validate
+from repro.data.edgestore import EdgeStore, InMemoryEdgeSource
+from repro.data.pipeline import Prefetcher
+from repro.parallel.sharding import box_queue_order
+
+from .planner import QueryPlan, plan_query_boxes
+from .vectorized import BoundAtom, VectorizedBoxJoin, build_atom_slice
+
+BACKENDS = ("auto", "host", "pallas")
+
+
+@dataclass
+class QueryStats:
+    """One ``count()`` / ``list()`` run of the QueryEngine, faithfully:
+    plan size and rank, backend lane mix, streaming working-set peaks,
+    slice-cache hits, measured block I/O, and the shared box-scheduler
+    telemetry (the ``merge_queue_telemetry`` contract)."""
+
+    order: Tuple[str, ...] = ()
+    rank: int = 0
+    n_boxes: int = 0
+    n_results: int = 0
+    # per-box execution
+    n_streamed_boxes: int = 0
+    slice_words_read: int = 0          # raw CSR words fetched across boxes
+    max_slice_words: int = 0           # largest single-box fetch
+    max_frontier: int = 0              # peak binding-frontier rows
+    n_kernel_boxes: int = 0            # innermost pair on kernels/intersect
+    n_host_boxes: int = 0              # innermost stage on the host lane
+    # async scheduler (workers > 1)
+    n_workers: int = 1
+    inflight_boxes: int = 0
+    queue_wait_s: float = 0.0
+    build_s: float = 0.0
+    compute_s: float = 0.0
+    overlap_s: float = 0.0
+    worker_utilization: float = 0.0
+    max_inflight_boxes: int = 0
+    max_inflight_words: int = 0
+    # measured block I/O on the attached BlockDevice
+    block_reads: int = 0
+    block_writes: int = 0
+    word_reads: int = 0
+    # LRU slice cache(s)
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_hit_words: int = 0
+    source: str = "memory"
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+
+@dataclass
+class _AtomMeta:
+    """A resolved body atom: relation source key + dims in the order."""
+
+    idx: int
+    key: str                           # key into the engine's source table
+    vars: Tuple[str, str]
+    first_dim: int
+    second_dim: int
+    direction: int                     # +1: val0 < val1 on every tuple,
+    #                                    -1: reversed index of one, 0: unknown
+
+
+def _merge_interval(covered: List[Tuple[int, int]], lo: int,
+                    hi: int) -> List[Tuple[int, int]]:
+    """Insert [lo, hi] into a sorted disjoint interval list."""
+    out: List[Tuple[int, int]] = []
+    placed = False
+    for a, b in covered:
+        if b + 1 < lo:
+            out.append((a, b))
+        elif hi + 1 < a:
+            if not placed:
+                out.append((lo, hi))
+                placed = True
+            out.append((a, b))
+        else:
+            lo, hi = min(lo, a), max(hi, b)
+    if not placed:
+        out.append((lo, hi))
+    return sorted(out)
+
+
+def _gaps(covered: List[Tuple[int, int]], lo: int,
+          hi: int) -> List[Tuple[int, int]]:
+    """Sub-intervals of [lo, hi] not covered yet, ascending."""
+    gaps = []
+    cur = lo
+    for a, b in covered:
+        if b < cur:
+            continue
+        if a > hi:
+            break
+        if a > cur:
+            gaps.append((cur, a - 1))
+        cur = max(cur, b + 1)
+        if cur > hi:
+            break
+    if cur <= hi:
+        gaps.append((cur, hi))
+    return gaps
+
+
+def _extract_rows(slabs: List[Tuple[int, int, np.ndarray, np.ndarray]],
+                  lo: int, hi: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(local indptr, values) of rows [lo, hi] out of covering slabs."""
+    parts_ip, parts_v = [], []
+    for slo, shi, ip, vals in sorted(slabs, key=lambda s: s[0]):
+        a, b = max(lo, slo), min(hi, shi)
+        if b < a:
+            continue
+        s, e = int(ip[a - slo]), int(ip[b - slo + 1])
+        parts_ip.append(np.diff(ip[a - slo:b - slo + 2]))
+        parts_v.append(vals[s:e])
+    if not parts_ip:
+        return np.zeros(1, np.int64), np.zeros(0, np.int32)
+    deg = np.concatenate(parts_ip)
+    ip_out = np.concatenate([np.zeros(1, np.int64),
+                             np.cumsum(deg, dtype=np.int64)])
+    return ip_out, np.concatenate(parts_v)
+
+
+class QueryEngine:
+    """Boxed out-of-core execution of a binary-atom conjunctive query.
+
+    Parameters
+    ----------
+    query : a ``core.queries.Query`` whose atoms are all binary (graph
+        patterns); general-arity queries stay on the scalar
+        ``core.queries.run_query`` reference path.
+    relations : mapping relation name -> source: an ``EdgeStore`` (or a
+        path to one), an ``InMemoryEdgeSource``, or a ``(src, dst)`` pair
+        of *directed* edge arrays. Use ``from_graph`` to orient an
+        undirected graph the way ``TriangleEngine`` does.
+    store : shortcut for single-relation queries: the one relation name
+        maps to this edge store path/instance.
+    order : variable order; default = the minimum-rank order
+        (``core.queries.best_order``), restricted to orders keeping every
+        atom consistent when any relation is store-backed (reordered
+        indexes need the relation in memory).
+    mem_words : box-planner budget; ``None`` = one box.
+    cache_words : per-relation LRU ``SliceCache`` budget (0 disables).
+    device : ``core.iomodel.BlockDevice`` charging source reads; defaults
+        to a fresh device for store-backed runs, ``None`` in memory.
+    backend : 'auto' (kernel lane on TPU, host lane otherwise), 'host'
+        (pure numpy), or 'pallas' (force the kernels/intersect lowering,
+        interpret off-TPU).
+    workers / inflight_boxes / prefetch_depth : the shared PR-4 box
+        scheduler knobs — identical semantics to ``TriangleEngine``.
+    dim_ratio : per-variable budget weights for the §5 split (default:
+        4:1 in favour of the first owned dimension).
+    """
+
+    def __init__(self, query: Query, *,
+                 relations: Optional[Dict[str, object]] = None,
+                 store=None,
+                 order: Optional[Sequence[str]] = None,
+                 mem_words: Optional[int] = None,
+                 cache_words: int = 0,
+                 device: Optional[BlockDevice] = None,
+                 io_block_words: int = 4096,
+                 backend: str = "auto",
+                 workers: int = 1,
+                 inflight_boxes: Optional[int] = None,
+                 prefetch_depth: int = 2,
+                 dim_ratio: Optional[Dict[str, float]] = None,
+                 chunk_entries: int = 4_000_000,
+                 use_pallas_kernels: Optional[bool] = None):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+        for a in query.atoms:
+            if len(a.vars) != 2:
+                raise ValueError(
+                    f"atom {a.rel}{a.vars}: QueryEngine executes binary "
+                    "(graph-pattern) atoms; use core.queries.run_query for "
+                    "general arities")
+        self.query = query
+        self.backend = backend
+        self.mem_words = mem_words
+        self.cache_words = int(cache_words)
+        self.dim_ratio = dim_ratio
+        self.chunk_entries = int(chunk_entries)
+        self.workers = max(1, int(workers))
+        self.inflight_boxes = max(1, int(inflight_boxes)) \
+            if inflight_boxes is not None else max(2, 2 * self.workers)
+        self.prefetch_depth = max(1, int(prefetch_depth))
+        if use_pallas_kernels is None:
+            import jax
+            use_pallas_kernels = jax.default_backend() == "tpu"
+        self.use_pallas_kernels = bool(use_pallas_kernels)
+
+        # -- resolve relation sources ------------------------------------
+        rel_names: List[str] = []
+        for a in query.atoms:
+            if a.rel not in rel_names:
+                rel_names.append(a.rel)
+        if store is not None:
+            if relations is not None:
+                raise ValueError("pass either relations= or store=, not both")
+            if len(rel_names) != 1:
+                raise ValueError(
+                    f"store= shorthand needs a single-relation query; this "
+                    f"one uses {rel_names}")
+            relations = {rel_names[0]: store}
+        if relations is None:
+            raise ValueError("QueryEngine needs relations= or store=")
+        missing = [r for r in rel_names if r not in relations]
+        if missing:
+            raise ValueError(f"no source given for relation(s) {missing}")
+
+        raw: Dict[str, object] = {}
+        any_store = False
+        for name in rel_names:
+            src = relations[name]
+            if isinstance(src, (str, os.PathLike)):
+                src = EdgeStore(src)
+            if isinstance(src, EdgeStore):
+                any_store = True
+            elif not (isinstance(src, tuple) and len(src) == 2) \
+                    and not hasattr(src, "read_rows"):
+                raise ValueError(
+                    f"relation {name!r}: unsupported source {type(src)}")
+            raw[name] = src
+        if device is None and any_store:
+            cache = max(2, (mem_words or (1 << 22)) // io_block_words)
+            device = BlockDevice(block_words=io_block_words,
+                                 cache_blocks=cache)
+        self.device = device
+        for name, src in raw.items():
+            if isinstance(src, EdgeStore):
+                if device is not None:
+                    src.attach_device(device)
+                continue
+            if isinstance(src, tuple):
+                # deduplicate the directed pairs: set semantics, matching
+                # the TrieArray reference path (and from_graph's
+                # orient_edges) so scalar run_query and the engine agree
+                u = np.asarray(src[0], dtype=np.int64)
+                v = np.asarray(src[1], dtype=np.int64)
+                nv = int(max(u.max(initial=-1), v.max(initial=-1))) + 1
+                if len(u):
+                    e = np.unique(np.stack([u, v], axis=1), axis=0)
+                    u, v = e[:, 0], e[:, 1]
+                ip, ix = csr_from_edges(u, v, n_nodes=nv) if nv else \
+                    (np.zeros(1, np.int64), np.zeros(0, np.int32))
+                # the device (given or store-created) charges these reads
+                # too — the ledger stays symmetric with reversed indexes
+                raw[name] = InMemoryEdgeSource(ip, ix, orientation="raw",
+                                               device=device)
+        self._any_store = any_store
+
+        # -- resolve the variable order and per-atom metadata -------------
+        in_memory = not any_store
+        self.order = validate(query, order, require_consistent=not in_memory)
+        self.n = len(self.order)
+        pos = {v: i for i, v in enumerate(self.order)}
+        self._raw = raw
+        metas: List[_AtomMeta] = []
+        for i, a in enumerate(query.atoms):
+            ori = getattr(raw[a.rel], "orientation", "raw")
+            if is_consistent(a, self.order):
+                key, vars_, direction = a.rel, tuple(a.vars), \
+                    (1 if ori == "minmax" else 0)
+            else:
+                key = f"{a.rel}~rev"
+                vars_ = (a.vars[1], a.vars[0])
+                direction = -1 if ori == "minmax" else 0
+                if key not in raw:
+                    raw[key] = self._reversed_source(raw[a.rel])
+            metas.append(_AtomMeta(i, key, vars_, pos[vars_[0]],
+                                   pos[vars_[1]], direction))
+        self._atoms = metas
+        self._owned: List[List[_AtomMeta]] = [[] for _ in range(self.n)]
+        for m in metas:
+            self._owned[m.first_dim].append(m)
+
+        # -- cache wrap + bookkeeping --------------------------------------
+        self._caches: List[SliceCache] = []
+        self._sources: Dict[str, object] = {}
+        used_keys = {m.key for m in metas}
+        for key in list(raw):
+            if key not in used_keys:
+                continue
+            src = raw[key]
+            if self.cache_words > 0:
+                src = SliceCache(src, self.cache_words)
+                self._caches.append(src)
+            self._sources[key] = src
+        self._nv_all = max((s.n_nodes for s in self._sources.values()),
+                           default=0)
+        self._plan_cache: Optional[Tuple[Optional[int], QueryPlan]] = None
+        self._stats_lock = threading.Lock()
+        self.stats = QueryStats(order=self.order)
+
+    # -- construction helpers -------------------------------------------------
+
+    @classmethod
+    def from_graph(cls, query: Query, src, dst, *,
+                   orientation: str = "minmax", **kw) -> "QueryEngine":
+        """Engine over one undirected graph: orient (exactly as
+        ``TriangleEngine`` does), build the CSR source, and bind it to the
+        query's single relation name."""
+        rel_names = {a.rel for a in query.atoms}
+        if len(rel_names) != 1:
+            raise ValueError(
+                f"from_graph needs a single-relation query; got {rel_names}")
+        a, b = orient_edges(np.asarray(src), np.asarray(dst), orientation)
+        nv = int(max(a.max(initial=-1), b.max(initial=-1))) + 1
+        ip, ix = csr_from_edges(a, b, n_nodes=nv) if nv else \
+            (np.zeros(1, np.int64), np.zeros(0, np.int32))
+        source = InMemoryEdgeSource(ip, ix, orientation=orientation)
+        return cls(query, relations={rel_names.pop(): source}, **kw)
+
+    def _reversed_source(self, src) -> InMemoryEdgeSource:
+        """In-memory reversed index R(y, x) for an inconsistent atom.
+
+        The reversed CSR is memoized on the source object (the analogue of
+        ``core.queries.reordered_index`` at the EdgeSource layer), so
+        repeated engines over the same relation re-sort once."""
+        if isinstance(src, EdgeStore):
+            raise ValueError(
+                "an atom inconsistent with the variable order needs a "
+                "reordered index, which requires the relation in memory; "
+                "choose a consistent order or load the store's edges")
+        csr = getattr(src, "_reverse_csr", None)
+        if csr is None:
+            indptr = np.asarray(src.indptr, dtype=np.int64)
+            indices = np.asarray(src.indices, dtype=np.int64)
+            rows = np.repeat(np.arange(len(indptr) - 1, dtype=np.int64),
+                             np.diff(indptr))
+            nv = max(src.n_nodes, int(indices.max(initial=-1)) + 1)
+            csr = csr_from_edges(indices, rows, n_nodes=nv)
+            src._reverse_csr = csr
+        return InMemoryEdgeSource(csr[0], csr[1], orientation="raw",
+                                  device=self.device)
+
+    # -- planning -------------------------------------------------------------
+
+    def plan(self) -> QueryPlan:
+        """The n-dimensional box plan (cached per ``mem_words``), derived
+        from the resident degree indexes only."""
+        if self._plan_cache is not None \
+                and self._plan_cache[0] == self.mem_words:
+            return self._plan_cache[1]
+        plan = self._plan_uncached()
+        self._plan_cache = (self.mem_words, plan)
+        return plan
+
+    def _plan_uncached(self) -> QueryPlan:
+        atoms = [Atom(m.key, m.vars) for m in self._atoms]
+        directions = {m.idx: m.direction for m in self._atoms}
+        rel_indptr = {k: np.asarray(s.indptr)
+                      for k, s in self._sources.items()}
+        plan = plan_query_boxes(atoms, self.order, rel_indptr,
+                                self.mem_words, dim_ratio=self.dim_ratio,
+                                directions=directions)
+        if self._nv_all == 0 or all(s.n_edges == 0
+                                    for s in self._sources.values()):
+            plan.boxes = []
+        return plan
+
+    # -- per-box stages (fetch serialized; build/work parallel) ----------------
+
+    def _est_box_words(self, box) -> int:
+        """Raw words ``_fetch_box`` will read: the same per-dimension gap
+        walk over the resident degree indexes, without the reads."""
+        covered: Dict[str, List[Tuple[int, int]]] = {}
+        words = 0
+        for d in range(self.n):
+            atoms_d = self._owned[d]
+            if not atoms_d:
+                continue
+            lo, hi = box[d]
+            for key in self._dim_keys(atoms_d):
+                src = self._sources[key]
+                ip = np.asarray(src.indptr)
+                lo_, hi_ = max(int(lo), 0), min(int(hi), src.n_nodes - 1)
+                if hi_ < lo_:
+                    continue
+                for glo, ghi in _gaps(covered.get(key, []), lo_, hi_):
+                    words += int(ip[ghi + 1] - ip[glo])
+                covered[key] = _merge_interval(covered.get(key, []),
+                                               lo_, hi_)
+        return words
+
+    @staticmethod
+    def _dim_keys(atoms_d: Sequence[_AtomMeta]) -> List[str]:
+        keys: List[str] = []
+        for m in atoms_d:
+            if m.key not in keys:
+                keys.append(m.key)
+        return keys
+
+    def _fetch_box(self, box):
+        """All source reads of one box (the serialized scheduler stage),
+        dim by dim with §5 interval dedup, plus the per-atom slice builds
+        needed for the full-conjunctive early exit: an empty atom slice
+        stops the box before any later dimension is read — exactly the
+        triangle executor's read stream on the triangle query. Returns
+        ``(payload, words_read)``; payload ``None`` for an empty box."""
+        slabs: Dict[str, list] = {}
+        covered: Dict[str, List[Tuple[int, int]]] = {}
+        slices: Dict[int, object] = {}
+        words = 0
+        for d in range(self.n):
+            atoms_d = self._owned[d]
+            if not atoms_d:
+                continue
+            lo, hi = box[d]
+            for key in self._dim_keys(atoms_d):
+                src = self._sources[key]
+                lo_, hi_ = max(int(lo), 0), min(int(hi), src.n_nodes - 1)
+                if hi_ < lo_:
+                    continue
+                for glo, ghi in _gaps(covered.get(key, []), lo_, hi_):
+                    ip, vals = src.read_rows(glo, ghi)
+                    slabs.setdefault(key, []).append((glo, ghi, ip, vals))
+                    words += len(vals)
+                covered[key] = _merge_interval(covered.get(key, []),
+                                               lo_, hi_)
+            for m in atoms_d:
+                src = self._sources[m.key]
+                lo_, hi_ = max(int(lo), 0), min(int(hi), src.n_nodes - 1)
+                if hi_ < lo_:
+                    return None, words
+                ip, vals = _extract_rows(slabs.get(m.key, []), lo_, hi_)
+                l2, h2 = box[m.second_dim]
+                slc = build_atom_slice(
+                    ip, vals, lo_,
+                    val_lo=int(l2) if l2 > 0 else None,
+                    val_hi=int(h2) if h2 < self._nv_all - 1 else None)
+                if slc.n_keys == 0:
+                    return None, words
+                slices[m.idx] = slc
+        return (box, slices, words), words
+
+    def _build_box(self, payload):
+        """Assemble the box's work item (parallel stage; no source access)."""
+        if payload is None:
+            return None
+        box, slices, words = payload
+        s = self.stats
+        with self._stats_lock:
+            s.n_streamed_boxes += 1
+            s.slice_words_read += words
+            s.max_slice_words = max(s.max_slice_words, words)
+        bound = [BoundAtom(m.first_dim, m.second_dim, slices[m.idx])
+                 for m in self._atoms]
+        return (box, bound)
+
+    def _make_join(self, bound, mode: str) -> VectorizedBoxJoin:
+        kernel_lane = self.backend == "pallas" or (
+            self.backend == "auto" and self.use_pallas_kernels)
+        return VectorizedBoxJoin(
+            bound, self.n, mode,
+            kernel_lane=kernel_lane and mode == "count",
+            use_pallas=True,
+            interpret=not self.use_pallas_kernels,
+            chunk_entries=self.chunk_entries)
+
+    def _note_join(self, vj: VectorizedBoxJoin) -> None:
+        with self._stats_lock:
+            self.stats.max_frontier = max(self.stats.max_frontier,
+                                          vj.max_frontier)
+            if vj.used_kernel:
+                self.stats.n_kernel_boxes += 1
+            else:
+                self.stats.n_host_boxes += 1
+
+    def _work_count(self, built) -> int:
+        _box, bound = built
+        vj = self._make_join(bound, "count")
+        out = vj.run()
+        self._note_join(vj)
+        return out
+
+    def _work_list(self, built) -> Optional[np.ndarray]:
+        _box, bound = built
+        vj = self._make_join(bound, "list")
+        vj.run()
+        self._note_join(vj)
+        rows = vj.bindings()
+        if len(rows) == 0:
+            return None
+        if self.device is not None:
+            self.device.write_words(rows.size)
+        return rows
+
+    # -- run plumbing ----------------------------------------------------------
+
+    def _reset_stats(self, plan: QueryPlan) -> None:
+        self.stats = QueryStats(order=self.order, rank=plan.rank,
+                                n_boxes=len(plan.boxes),
+                                n_workers=self.workers,
+                                source="edgestore" if self._any_store
+                                else "memory")
+
+    def _io_mark(self):
+        cm = [(c.hits, c.misses, c.hit_words) for c in self._caches]
+        if self.device is None:
+            return (None, cm)
+        s = self.device.stats
+        return ((s.block_reads, s.block_writes, s.word_reads), cm)
+
+    def _io_collect(self, mark) -> None:
+        io_mark, cm = mark
+        if self.device is not None and io_mark is not None:
+            s = self.device.stats
+            self.stats.block_reads = s.block_reads - io_mark[0]
+            self.stats.block_writes = s.block_writes - io_mark[1]
+            self.stats.word_reads = s.word_reads - io_mark[2]
+        for cache, (h, m, w) in zip(self._caches, cm):
+            self.stats.cache_hits += cache.hits - h
+            self.stats.cache_misses += cache.misses - m
+            self.stats.cache_hit_words += cache.hit_words - w
+
+    def _queue_order(self, boxes) -> List[int]:
+        ledger = bool(self._caches) or any(
+            getattr(s, "device", None) is not None
+            for s in self._sources.values())
+        return box_queue_order([self._est_box_words(b) for b in boxes],
+                               ledger_sensitive=ledger)
+
+    def _run(self, boxes, work) -> List:
+        """Per-box results in plan order — serial Prefetcher pipeline for
+        ``workers=1`` (the oracle), the shared pool otherwise."""
+        if self.workers > 1 and len(boxes) > 1:
+            inflight_words = self.inflight_boxes * self.mem_words \
+                if self.mem_words is not None else None
+            results, tele = run_box_queue(
+                boxes, order=self._queue_order(boxes),
+                est_words=self._est_box_words,
+                fetch=self._fetch_box,
+                build=self._build_box,
+                work=work,
+                workers=self.workers,
+                inflight_items=self.inflight_boxes,
+                inflight_words=inflight_words)
+            merge_queue_telemetry(self.stats, tele, self._stats_lock,
+                                  inflight_boxes=self.inflight_boxes)
+            return results
+        results: List = [None] * len(boxes)
+        pf = Prefetcher(
+            (self._build_box(self._fetch_box(b)[0]) for b in boxes),
+            depth=self.prefetch_depth)
+        try:
+            for i, built in enumerate(pf):
+                if built is None:
+                    continue
+                results[i] = work(built)
+        finally:
+            pf.close()
+        return results
+
+    # -- public entry points ----------------------------------------------------
+
+    def count(self) -> int:
+        plan = self.plan()
+        self._reset_stats(plan)
+        mark = self._io_mark()
+        results = self._run(plan.boxes, self._work_count)
+        self._io_collect(mark)
+        total = sum(r for r in results if r is not None)
+        self.stats.n_results = total
+        return total
+
+    def list(self) -> np.ndarray:
+        """All result bindings as an (m, len(head)) int64 array, columns in
+        the query's head order (bag semantics: one row per LFTJ binding)."""
+        plan = self.plan()
+        self._reset_stats(plan)
+        mark = self._io_mark()
+        results = self._run(plan.boxes, self._work_list)
+        self._io_collect(mark)
+        parts = [r for r in results if r is not None]
+        rows = np.concatenate(parts) if parts \
+            else np.zeros((0, self.n), dtype=np.int64)
+        self.stats.n_results = len(rows)
+        head_cols = [self.order.index(h) for h in self.query.head]
+        return rows[:, head_cols]
+
+
+def query_count(query: Query, src, dst, **kw) -> int:
+    """One-shot: count a pattern on an undirected graph (minmax DAG)."""
+    return QueryEngine.from_graph(query, src, dst, **kw).count()

@@ -397,6 +397,43 @@ class TestEngineConfig:
         assert 0.0 < thr2 <= 1.0
         assert json.loads(cache_file.read_text())[key[0]] == thr2
 
+    def test_pallas_band_persisted_alongside_dense_crossover(
+            self, tmp_path, monkeypatch):
+        """The pallas mid-band calibration lands in the same JSON cache as
+        the dense crossover (`:pallas` key suffix) and plumbs through the
+        `pallas_threshold="measured"` engine knob."""
+        import json
+
+        from repro.core import engine as eng_mod
+        from repro.core import measure_pallas_crossover
+
+        monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+        monkeypatch.delenv("REPRO_CROSSOVER_REMEASURE", raising=False)
+        eng_mod._crossover_memo.clear()
+        dense = measure_dense_crossover(nv=64, repeats=1)
+        band = measure_pallas_crossover(nv=64, repeats=1)
+        assert 0.0 < band <= 1.0
+        data = json.loads((tmp_path / "crossover.json").read_text())
+        dense_keys = [k for k in data if k.endswith(":nv64")]
+        band_keys = [k for k in data if k.endswith(":nv64:pallas")]
+        assert dense_keys and band_keys       # both entries, one file
+        assert data[band_keys[0]] == band
+        assert data[dense_keys[0]] == dense
+
+        # a planted band value is trusted and steers the engine knob
+        # (the knob measures at the default nv=256 grid)
+        data[band_keys[0].replace(":nv64:", ":nv256:")] = 0.031
+        (tmp_path / "crossover.json").write_text(json.dumps(data))
+        eng_mod._crossover_memo.clear()
+        src = np.asarray([0, 0, 1])
+        dst = np.asarray([1, 2, 2])
+        eng = TriangleEngine(src, dst,
+                             pallas_threshold="measured")
+        assert eng.pallas_threshold == pytest.approx(0.031)
+        # default stays the static crossover/4 band
+        eng2 = TriangleEngine(src, dst, dense_threshold=0.2)
+        assert eng2.pallas_threshold == pytest.approx(0.05)
+
     def test_auto_dispatch_routes_midband_to_pallas_when_supported(self):
         """Regression: 'auto' could only ever return dense/binary, leaving
         the Pallas backend dead. With pallas support flagged, mid-density
