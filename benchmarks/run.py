@@ -7,6 +7,7 @@
   ooc    out-of-core engine I/O vs Thm. 10     (benchmarks.outofcore)
   query  general patterns I/O vs Thm. 13       (benchmarks.query_patterns)
   pscale async scheduler speedup vs workers    (benchmarks.parallel_scaling)
+  skew   heavy/light vs uniform planner A/B    (benchmarks.skew_scaling)
   kernels Pallas kernels vs references          (benchmarks.kernel_bench)
   roofline per-cell roofline terms from dry-run (benchmarks.roofline)
 
@@ -32,7 +33,8 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke pass: fig9 + fig11 + ooc at --fast sizes")
+                    help="CI smoke pass: fig9 + fig11 + ooc + query + skew "
+                         "at --fast sizes")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write emitted rows as a JSON run record")
     args = ap.parse_args()
@@ -41,7 +43,7 @@ def main() -> None:
 
     from . import (arboricity_scaling, boxing_overhead, kernel_bench,
                    lftj_vs_mgt, outofcore, parallel_scaling, query_patterns,
-                   roofline, vanilla_vs_boxed)
+                   roofline, skew_scaling, vanilla_vs_boxed)
     from .common import collected_rows, reset_rows
 
     suites = {
@@ -52,13 +54,14 @@ def main() -> None:
         "ooc": outofcore.main,
         "query": query_patterns.main,
         "pscale": parallel_scaling.main,
+        "skew": skew_scaling.main,
         "kernels": kernel_bench.main,
         "roofline": roofline.main,
     }
     if args.only:
         names = [args.only]
     elif args.smoke:
-        names = ["fig9", "fig11", "ooc", "query"]
+        names = ["fig9", "fig11", "ooc", "query", "skew"]
     else:
         names = list(suites)
     reset_rows()

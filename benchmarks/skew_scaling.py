@@ -1,0 +1,101 @@
+"""Skew scaling: heavy/light box planning vs the uniform planner on RMAT.
+
+An RMAT graph's degree distribution is heavy-tailed, so uniform boxes mix
+hub rows with light rows: every padded neighbor matrix is sized by the hub
+degree and the light rows ride along as padding. The heavy/light planner
+(``skew="heavy_light"``) breaks cuts at class transitions and routes each
+box by lane — hub boxes to the dense/MXU lane, light and mixed boxes to the
+host searchsorted lane — so padded neighbor matrices are only ever built
+where they pay off.
+
+Per memory budget the A/B measures, at equal ``mem_words``:
+
+* ``padded``/``actual`` words for both planners and the reduction factor
+  (``padded_uniform / padded_heavy_light``; the gate asserts >= 2x on RMAT,
+  with padded_hl == 0 treated as infinite reduction and reported as the
+  uniform padding count),
+* box + lane mix of the heavy/light plan,
+* worker utilization at workers={1,4} under the mass-based LPT schedule,
+* the triangle count, pinned to the uniform planner's (which is itself
+  pinned to the unboxed oracle) — a planner that changes answers fails
+  here, not in a downstream dashboard.
+
+derived: count=<triangles>;padded_uni=<w>;padded_hl=<w>;actual=<w>;
+         reduction=<x>;boxes_uni=<n>;boxes_hl=<n>;hub=<n>;light=<n>;
+         mixed=<n>;util_w1=<frac>;util_w4=<frac>
+
+``python -m benchmarks.skew_scaling --smoke --json skew-scaling.json``
+runs the fast sizes standalone and writes the rows as the CI artifact.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import TriangleEngine
+from repro.data.graphs import rmat_graph
+
+from .common import emit
+
+FRACS = (0.05, 0.15)        # memory budgets as fractions of |E| words
+MIN_REDUCTION = 2.0         # acceptance gate: >= 2x padded-words reduction
+
+
+def _run(src, dst, mem_words, skew, workers=1):
+    eng = TriangleEngine(src, dst, mem_words=mem_words, skew=skew,
+                         workers=workers)
+    t0 = time.perf_counter()
+    cnt = eng.count()
+    us = (time.perf_counter() - t0) * 1e6
+    return cnt, eng.stats, us
+
+
+def main(fast: bool = False) -> None:
+    nv, ne = ((1 << 9, 6000) if fast else (1 << 12, 60000))
+    src, dst = rmat_graph(nv, ne, seed=7)
+    oracle = TriangleEngine(src, dst, mem_words=None).count()
+    words = 2 * len(src)
+    for frac in FRACS:
+        mem = max(512, int(words * frac))
+        cnt_u, st_u, us_u = _run(src, dst, mem, "uniform")
+        cnt_h, st_h, us_h = _run(src, dst, mem, "heavy_light")
+        assert cnt_u == oracle, (cnt_u, oracle)
+        assert cnt_h == oracle, (cnt_h, oracle)
+        # the tentpole gate: heavy/light must cut materialized padding by
+        # >= MIN_REDUCTION on a skewed graph at the same memory budget
+        assert st_h.padded_words * MIN_REDUCTION <= st_u.padded_words, \
+            (st_h.padded_words, st_u.padded_words)
+        red = (st_u.padded_words / st_h.padded_words
+               if st_h.padded_words else float(st_u.padded_words))
+        cnt_h4, st_h4, _ = _run(src, dst, mem, "heavy_light", workers=4)
+        assert cnt_h4 == oracle, (cnt_h4, oracle)
+        emit(f"skew/RMAT/m{int(frac * 100)}", us_h,
+             f"count={cnt_h};padded_uni={st_u.padded_words};"
+             f"padded_hl={st_h.padded_words};actual={st_h.actual_words};"
+             f"reduction={red:.1f};boxes_uni={st_u.n_boxes};"
+             f"boxes_hl={st_h.n_boxes};hub={st_h.n_hub_boxes};"
+             f"light={st_h.n_light_boxes};mixed={st_h.n_mixed_boxes};"
+             f"util_w1={st_h.worker_utilization:.2f};"
+             f"util_w4={st_h4.worker_utilization:.2f}")
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    from .common import collected_rows, reset_rows
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast sizes (the CI gate's configuration)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write emitted rows as JSON")
+    args = ap.parse_args()
+    reset_rows()
+    print("name,us_per_call,derived")
+    main(fast=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"suites": ["skew"], "fast": bool(args.smoke),
+                       "rows": collected_rows()}, f, indent=2)
+        print(f"# wrote {args.json}")

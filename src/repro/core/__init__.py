@@ -3,8 +3,10 @@
 from .triearray import SPILL, TrieArray, TrieArraySlice
 from .leapfrog import (Atom, LeapfrogJoin, LeapfrogTriejoin, TrieIterator,
                        lftj_triangle_count, triangle_query_atoms)
-from .boxing import (BoxedLFTJ, BoxingConfig, BoxStats, boxed_triangle_count,
-                     greedy_degree_cuts, plan_boxes, plan_boxes_from_degrees)
+from .boxing import (BoxedLFTJ, BoxingConfig, BoxStats, SkewPlan,
+                     boxed_triangle_count, class_cuts, classify_heavy,
+                     greedy_degree_cuts, heavy_threshold_default, plan_boxes,
+                     plan_boxes_from_degrees, plan_boxes_heavy_light)
 from .executor import BoxSlice, SliceCache, StreamingExecutor
 from .iomodel import BlockDevice, CountingReader, IOStats
 from .lftj_jax import (csr_from_edges, orient_edges, pad_neighbors,
@@ -32,5 +34,6 @@ __all__ = [
     "engine_list", "measure_dense_crossover", "plan_boxes_from_degrees",
     "BoxSlice", "SliceCache", "StreamingExecutor", "rank", "validate",
     "best_order", "reordered_index", "greedy_degree_cuts",
-    "measure_pallas_crossover",
+    "measure_pallas_crossover", "SkewPlan", "class_cuts", "classify_heavy",
+    "heavy_threshold_default", "plan_boxes_heavy_light",
 ]

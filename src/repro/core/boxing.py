@@ -411,6 +411,139 @@ def plan_boxes_from_degrees(indptr: np.ndarray, mem_words: int,
     return boxes
 
 
+# ---------------------------------------------------------------------------
+# skew-resistant planning: heavy/light decomposition ("Skew Strikes Back")
+# ---------------------------------------------------------------------------
+
+def heavy_threshold_default(total_degree: int) -> int:
+    """Default hub threshold: deg >= sqrt(2·|E|) (the √E-style split of
+    worst-case-optimal join analyses; ``total_degree`` is Σ deg = |E| for
+    an oriented CSR)."""
+    return max(2, int(math.isqrt(max(0, 2 * int(total_degree)))))
+
+
+def classify_heavy(indptr: np.ndarray,
+                   threshold: Optional[int] = None
+                   ) -> tuple[np.ndarray, int]:
+    """(heavy mask, threshold) from a resident degree index.
+
+    A vertex is *heavy* (a hub) when its out-degree reaches the threshold
+    (default ``heavy_threshold_default``); everything else — including
+    zero-degree rows — is light.
+    """
+    deg = np.diff(np.asarray(indptr, dtype=np.int64))
+    thr = heavy_threshold_default(int(deg.sum())) if threshold is None \
+        else max(1, int(threshold))
+    return deg >= thr, thr
+
+
+def class_cuts(cost: np.ndarray, budget: int,
+               heavy: np.ndarray) -> list:
+    """``greedy_degree_cuts`` that never mixes heavy and light rows.
+
+    Returns ``[(lo, hi, is_heavy)]``: the same contiguous mass-budgeted
+    ranges as the uniform cutter, with an additional break at every
+    heavy/light class transition so each range is pure-class. Zero-cost
+    rows carry no class (they are absorbed free into whichever range they
+    fall in), so an isolated hub between absent rows still gets its own
+    pinned range without fragmenting the plan.
+    """
+    n = len(cost)
+    if n == 0:
+        return []
+    cls = np.where(np.asarray(heavy, dtype=bool), 1, 0)
+    wild = np.asarray(cost) == 0
+    real = np.flatnonzero(~wild)
+    if len(real) == 0:
+        return [(0, n - 1, False)]
+    # forward-fill the wildcard rows with the previous real class (head
+    # rows take the first real class), so runs break only on real changes
+    last_real = np.maximum.accumulate(np.where(~wild, np.arange(n), -1))
+    filled = np.where(last_real >= 0, cls[np.maximum(last_real, 0)],
+                      cls[real[0]])
+    breaks = np.flatnonzero(np.diff(filled) != 0) + 1
+    bounds = np.concatenate([[0], breaks, [n]])
+    cuts = []
+    for b0, b1 in zip(bounds[:-1], bounds[1:]):
+        is_h = bool(filled[b0])
+        for lo, hi in _greedy_degree_cuts(cost[b0:b1], budget):
+            cuts.append((int(b0 + lo), int(b0 + hi), is_h))
+    return cuts
+
+
+def _pair_lane(x_heavy: Optional[bool], y_heavy: Optional[bool]) -> str:
+    if x_heavy and y_heavy:
+        return "hub"
+    if x_heavy is False and y_heavy is False:
+        return "light"
+    return "mixed"
+
+
+@dataclass
+class SkewPlan:
+    """A heavy/light box plan plus its per-box lane metadata.
+
+    ``lanes[i]`` classifies ``boxes[i]``: ``"hub"`` (both ranges heavy —
+    near-dense by construction, routed to the dense/Pallas lanes),
+    ``"light"`` (both ranges light — routed to the host searchsorted lane,
+    which never materializes a padded matrix), or ``"mixed"``.
+    """
+
+    boxes: list = field(default_factory=list)
+    lanes: list = field(default_factory=list)
+    threshold: int = 0
+    n_heavy: int = 0
+
+    def lane_of(self, box) -> Optional[str]:
+        try:
+            return self.lanes[self.boxes.index(box)]
+        except ValueError:
+            return None
+
+
+def plan_boxes_heavy_light(indptr: np.ndarray,
+                           mem_words: Optional[int],
+                           ratio_xy: float = 4.0,
+                           monotone_prune: bool = True,
+                           row_overhead: int = 2,
+                           heavy_threshold: Optional[int] = None) -> SkewPlan:
+    """Skew-resistant triangle box plan (``skew="heavy_light"``).
+
+    Same contract as ``plan_boxes_from_degrees`` — contiguous
+    ``(lx, hx, ly, hy)`` boxes partitioning the oriented edge set, sized by
+    actual slice mass (Σ deg + overhead ≤ budget per range) — but every cut
+    additionally breaks at heavy/light class transitions
+    (``classify_heavy``), so each box is pure hub-hub, pure light-light, or
+    a hub×light mixture, and the per-box lane is known at plan time. Hubs
+    whose single row overflows the budget become pinned ranges exactly as
+    in the uniform planner (the plan-level spill).
+    """
+    nv = len(indptr) - 1
+    if nv <= 0:
+        return SkewPlan()
+    deg = np.diff(np.asarray(indptr, dtype=np.int64))
+    heavy, thr = classify_heavy(indptr, heavy_threshold)
+    n_heavy = int(heavy.sum())
+    cost = np.where(deg > 0, deg + row_overhead, 0)
+    if mem_words is None or int(cost.sum()) <= mem_words:
+        any_h, any_l = n_heavy > 0, bool((~heavy[deg > 0]).any())
+        lane = _pair_lane(any_h and not any_l, any_h and not any_l) \
+            if not (any_h and any_l) else "mixed"
+        return SkewPlan(boxes=[(0, nv - 1, 0, nv - 1)], lanes=[lane],
+                        threshold=thr, n_heavy=n_heavy)
+    bx = max(1, int(mem_words * ratio_xy / (1 + ratio_xy)))
+    by = max(1, mem_words - bx)
+    xcuts = class_cuts(cost, bx, heavy)
+    ycuts = class_cuts(cost, by, heavy)
+    plan = SkewPlan(threshold=thr, n_heavy=n_heavy)
+    for lx, hx, xh in xcuts:
+        for ly, hy, yh in ycuts:
+            if hy >= lx or not monotone_prune:
+                plan.boxes.append((lx, hx, ly, hy))
+                plan.lanes.append(_pair_lane(xh, yh))
+    return plan
+
+
 def boxed_triangle_count(edges_ta: TrieArray, mem_words: int,
                          block_words: int = 4096,
                          device: Optional[BlockDevice] = None,

@@ -69,8 +69,9 @@ from repro.parallel.sharding import (balanced_box_schedule, box_mesh,
 from .executor import SliceCache, StreamingExecutor, _pow2
 from .iomodel import BlockDevice
 from .lftj_jax import (SENTINEL, _count_chunked, _count_rows_chunked,
-                       _list_chunked, _row_intersect_count, csr_from_edges,
-                       orient_edges, pad_neighbors, pad_neighbors_binned)
+                       _list_chunked, _list_pairs_chunked,
+                       _row_intersect_count, csr_from_edges, orient_edges,
+                       pad_neighbors, pad_neighbors_binned)
 
 BACKENDS = ("auto", "binary", "dense", "pallas", "host")
 
@@ -101,6 +102,15 @@ class EngineStats:
     n_rescans: int = 0
     dense_threshold: float = 0.0
     shard_edges: List[int] = field(default_factory=list)
+    # skew-aware planning (skew="heavy_light"): the plan's lane mix plus
+    # the padded-vs-actual word ledger the uniform/heavy-light A/B compares
+    skew: str = "uniform"
+    heavy_threshold: int = 0           # hub degree cut the plan used
+    n_hub_boxes: int = 0               # both ranges heavy -> dense/pallas
+    n_light_boxes: int = 0             # both ranges light -> host lane
+    n_mixed_boxes: int = 0             # one heavy side   -> host lane
+    padded_words: int = 0              # materialized padded-matrix words
+    actual_words: int = 0              # real neighbor entries processed
     # async box scheduler (workers > 1): queue-wait/overlap/utilization
     # telemetry plus the observed in-flight peaks (the budget the window
     # promises to respect)
@@ -136,6 +146,13 @@ class EngineStats:
     def cache_hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
+
+    @property
+    def padding_ratio(self) -> float:
+        """Materialized padded words per actual neighbor word (1.0 = no
+        padded matrix was ever built beyond the real entries)."""
+        return self.padded_words / self.actual_words \
+            if self.actual_words else 0.0
 
     def as_info(self) -> dict:
         """Legacy info dict (triangle_count_boxed_vectorized compat)."""
@@ -358,10 +375,25 @@ class TriangleEngine:
         calibration (``measure_pallas_crossover``, cached in the same
         ``crossover.json`` as the dense crossover).
     degree_bins : bin vertices by degree (power-of-4 widths) so padding is
-        per-bin instead of global K = max degree (skewed graphs). Requires
-        the edge list in memory: store-backed engines ignore it (with a
-        warning) — the streaming executor already compacts padding to the
-        box-local max degree, which is the out-of-core analogue.
+        per-bin instead of global K = max degree (skewed graphs). In-memory
+        engines run the global binned layout; store-backed engines bin
+        *per box slice* inside the streaming executor (the out-of-core
+        analogue — same counts, padding bounded by the bin growth factor
+        instead of the box-local max degree). Sharded listing runs the
+        per-bin-pair listing kernel. Never ignored, never a silent
+        fallback.
+    skew : 'uniform' (default, the mass-budgeted grid cutter) or
+        'heavy_light': classify vertices heavy (degree >= heavy_threshold)
+        vs light from the resident degree index and break every box range
+        at class transitions, so each box is pure-class per axis. Hub-hub
+        boxes (near-dense by construction) route to the dense/Pallas
+        lanes; light and mixed boxes route to the host searchsorted lane,
+        which never materializes a padded matrix. Lane decisions are
+        recorded in ``EngineStats`` (``n_hub_boxes`` / ``n_light_boxes`` /
+        ``n_mixed_boxes``, ``padded_words`` vs ``actual_words``) for exact
+        A/B against the uniform planner.
+    heavy_threshold : hub degree cut for ``skew='heavy_light'``; default
+        ``heavy_threshold_default`` (√(2·|E|)-style).
     devices : devices for box sharding; default ``jax.devices()``.
     chunk : edge-chunk length of the scan (peak memory O(chunk · K)).
     prefetch_depth : how many box slices the host builds ahead of the
@@ -396,6 +428,8 @@ class TriangleEngine:
                  dense_threshold=0.05,
                  pallas_threshold=None,
                  degree_bins: bool = False,
+                 skew: str = "uniform",
+                 heavy_threshold: Optional[int] = None,
                  devices: Optional[Sequence] = None,
                  shard: str | bool = "auto",
                  chunk: int = 2048,
@@ -405,8 +439,13 @@ class TriangleEngine:
                  use_pallas_kernels: Optional[bool] = None):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+        if skew not in ("uniform", "heavy_light"):
+            raise ValueError(
+                f"skew {skew!r} not in ('uniform', 'heavy_light')")
         self.backend = backend
         self.degree_bins = degree_bins
+        self.skew = skew
+        self.heavy_threshold = heavy_threshold
         self.chunk = int(chunk)
         self.mem_words = mem_words
         self.prefetch_depth = int(prefetch_depth)
@@ -476,17 +515,16 @@ class TriangleEngine:
                 "through host memory (one full sequential pass); for graphs "
                 "larger than host RAM pass shard=False to keep the "
                 "bounded-memory streaming path.", stacklevel=2)
-        if self.degree_bins and self.indices is None:
-            warnings.warn(
-                "degree_bins is ignored for store-backed engines (the "
-                "global binned layout needs the edge list in memory); the "
-                "streaming executor already pads per box-local max degree.",
-                stacklevel=2)
         self._npad = None
         self._npad_host = None
         self._bins = None
         self._plan_cache: Optional[Tuple[Optional[int], list]] = None
-        self.stats = EngineStats(dense_threshold=self.dense_threshold)
+        # box -> lane ("hub"/"light"/"mixed"), filled by the heavy_light
+        # planner; the lane steers _pick_backend for planned boxes
+        self._box_lane: dict = {}
+        self._skew_threshold = 0
+        self.stats = EngineStats(dense_threshold=self.dense_threshold,
+                                 skew=self.skew)
 
     # -- lazy derived state --------------------------------------------------
 
@@ -592,11 +630,24 @@ class TriangleEngine:
 
     def _plan_uncached(self) -> List[Tuple[int, int, int, int]]:
         if self.nv == 0 or self.source.n_edges == 0:
+            self._box_lane = {}
             return []
-        if self.mem_words is None:
-            return [(0, self.nv - 1, 0, self.nv - 1)]
         # hy < lx pruning is only sound when every edge has x < y (minmax)
         prune = self.orientation == "minmax"
+        if self.skew == "heavy_light":
+            # skew-resistant plan straight from the resident degree index
+            # (works identically in-memory and store-backed): pure-class
+            # ranges per axis, lane metadata per box
+            from .boxing import plan_boxes_heavy_light
+            sp = plan_boxes_heavy_light(self.indptr, self.mem_words,
+                                        monotone_prune=prune,
+                                        heavy_threshold=self.heavy_threshold)
+            self._box_lane = dict(zip(sp.boxes, sp.lanes))
+            self._skew_threshold = sp.threshold
+            return sp.boxes
+        self._box_lane = {}
+        if self.mem_words is None:
+            return [(0, self.nv - 1, 0, self.nv - 1)]
         if self.indices is None:
             from .boxing import plan_boxes_from_degrees
             return plan_boxes_from_degrees(self.indptr, self.mem_words,
@@ -646,9 +697,15 @@ class TriangleEngine:
         return InMemoryEdgeSource(indptr, indices,
                                   orientation=self.orientation)
 
-    def _pick_backend(self, n_edges: int, wx: int, wy: int) -> str:
+    def _pick_backend(self, n_edges: int, wx: int, wy: int,
+                      box=None) -> str:
         """Density dispatch: dense above the crossover, Pallas for the
         mid-density band, binary-search otherwise.
+
+        With ``skew="heavy_light"`` a planned ``box`` overrides density:
+        hub-hub boxes go to the dense MXU lane (Pallas/binary when the
+        one-hot footprint cannot fit), light and mixed boxes to the host
+        searchsorted lane — neither ever materializes a padded matrix.
 
         The Pallas rotation-intersect kernel is only profitable compiled on
         real TPU hardware, so 'auto' routes mid-density boxes (density
@@ -661,6 +718,15 @@ class TriangleEngine:
         """
         if self.backend != "auto":
             return self.backend
+        lane = self._box_lane.get(box) if box is not None else None
+        if lane is not None:
+            if lane == "hub":
+                est_rows = min(wx, n_edges) + min(wy, n_edges)
+                est_cols = min(self.nv, 16 * max(1, n_edges))
+                if est_rows * est_cols <= _DENSE_WORDS_CAP:
+                    return "dense"
+                return "pallas" if self.use_pallas_kernels else "binary"
+            return "host"
         density = n_edges / max(1, wx * wy)
         # feasibility of the dense one-hots: the executor compacts rows to
         # the referenced endpoints (≤ min(width, edges) per side) and
@@ -693,6 +759,11 @@ class TriangleEngine:
                                  dense_words_cap=_DENSE_WORDS_CAP,
                                  stats=self.stats,
                                  workers=self.workers,
+                                 # store-backed binned layout lives in the
+                                 # executor (per box slice); in-memory
+                                 # engines keep the global binned path
+                                 degree_bins=self.degree_bins
+                                 and self.indices is None,
                                  inflight_boxes=self.inflight_boxes,
                                  inflight_words=inflight_words)
 
@@ -700,8 +771,15 @@ class TriangleEngine:
         self.stats = EngineStats(dense_threshold=self.dense_threshold,
                                  n_boxes=n_boxes,
                                  n_workers=self.workers,
+                                 skew=self.skew,
+                                 heavy_threshold=self._skew_threshold,
                                  source="edgestore" if self.indices is None
                                  else "memory")
+        if self._box_lane:
+            lanes = list(self._box_lane.values())
+            self.stats.n_hub_boxes = lanes.count("hub")
+            self.stats.n_light_boxes = lanes.count("light")
+            self.stats.n_mixed_boxes = lanes.count("mixed")
 
     def _io_mark(self):
         cache = self._slice_cache
@@ -745,12 +823,13 @@ class TriangleEngine:
         staged = self._staged_source()
         ex = self._make_executor(source=staged)
         sparse: List[Tuple[np.ndarray, np.ndarray]] = []
+        sparse_boxes: List[Tuple[int, int, int, int]] = []
         heavy: List[Tuple[int, int, int, int]] = []
         for box in boxes:
             eu, ev, wx, wy, slab = self._box_edges_full(box, staged)
             if len(eu) == 0:
                 continue
-            be = self._pick_backend(len(eu), wx, wy)
+            be = self._pick_backend(len(eu), wx, wy, box)
             if be in ("dense", "pallas"):
                 if self.workers > 1 \
                         and getattr(staged, "device", None) is None:
@@ -763,14 +842,17 @@ class TriangleEngine:
                     total += ex.count_box(box, x_slab=slab)
             else:
                 sparse.append((eu, ev))
+                sparse_boxes.append(box)
                 self.stats.n_binary_boxes += 1
         if heavy:
             total += ex.run_count(heavy)
         if sparse:
-            if self.degree_bins and self.indices is not None:
-                total += self._count_sharded_binned(sparse)
+            if self.degree_bins:
+                total += self._count_sharded_binned(sparse, staged,
+                                                    boxes=sparse_boxes)
             else:
-                total += self._count_sharded(sparse, staged)
+                total += self._count_sharded(sparse, staged,
+                                             boxes=sparse_boxes)
         self._io_collect(mark)
         return total
 
@@ -784,7 +866,7 @@ class TriangleEngine:
             eu, ev, wx, wy, slab = self._box_edges_full(box)
             if len(eu) == 0:
                 continue
-            be = self._pick_backend(len(eu), wx, wy)
+            be = self._pick_backend(len(eu), wx, wy, box)
             if be in ("dense", "pallas"):
                 total += ex.count_box(box, x_slab=slab)
             else:
@@ -821,7 +903,16 @@ class TriangleEngine:
 
     # -- sharded execution (the "Boxes" sharding rule) -------------------------
 
-    def _schedule(self, edge_lists) -> list:
+    def _schedule(self, edge_lists, boxes=None) -> list:
+        """LPT shard schedule. The uniform planner balances on in-box edge
+        counts; under ``skew="heavy_light"`` the cost is the box's actual
+        *slice mass* (Σ member degrees via ``box_mass_costs``) — on skewed
+        graphs a hub box's work is dominated by its neighbor mass, not its
+        edge count, and edge-count LPT leaves workers idle behind it."""
+        if boxes is not None and self.skew == "heavy_light":
+            from repro.parallel.sharding import box_mass_costs
+            return balanced_box_schedule(
+                box_mass_costs(self.indptr, boxes), len(self.devices))
         return balanced_box_schedule([len(eu) for eu, _ in edge_lists],
                                      len(self.devices))
 
@@ -852,12 +943,12 @@ class TriangleEngine:
         self.stats.local_npad_shape = tuple(npad_s.shape)
         return eu_s, ev_s, ok_s, npad_s, rows_s
 
-    def _count_sharded(self, edge_lists, source=None) -> int:
+    def _count_sharded(self, edge_lists, source=None, boxes=None) -> int:
         """Data-parallel box execution with *non-replicated* neighbor data:
         every shard receives only the renumbered rows its boxes touch, so
         per-device memory is O(slice), not O(V·K)."""
         mesh = box_mesh(self.devices)
-        schedule = self._schedule(edge_lists)
+        schedule = self._schedule(edge_lists, boxes=boxes)
         eu_s, ev_s, ok_s, npad_s, _rows = self._shard_slices(
             edge_lists, schedule, pad_multiple=self.chunk, source=source)
         chunk = self.chunk
@@ -886,18 +977,35 @@ class TriangleEngine:
                     jnp.asarray(ev_s), jnp.asarray(ok_s))
         return int(jnp.sum(parts))
 
-    def _count_sharded_binned(self, edge_lists) -> int:
+    def _binned_layout(self, source=None):
+        """(row_bin, bins, bin_pos) for the sharded binned kernels.
+
+        In-memory engines use the cached global layout; store-backed
+        engines build it from the already-staged source CSR (the sharded
+        paths stage the neighbor stream through host memory anyway), so
+        ``degree_bins=True`` works sharded for both — never dropped.
+        """
+        if self.indices is not None:
+            row_bin, bins = self.bins
+        else:
+            src = self.source if source is None else source
+            row_bin, bins = pad_neighbors_binned(
+                np.asarray(src.indptr), np.asarray(src.indices))
+        bin_pos = np.zeros(self.nv, dtype=np.int64)
+        for rows, _ in bins:
+            bin_pos[rows] = np.arange(len(rows))
+        return row_bin, bins, bin_pos
+
+    def _count_sharded_binned(self, edge_lists, source=None,
+                              boxes=None) -> int:
         """Sharded count through the degree-binned layout: one kernel per
         (bin_u, bin_v) width pair, each shard holding only the bin rows its
         edges reference. This wires ``pad_neighbors_binned`` into the
         shard_map path — a hub row no longer sets the padded width of every
         device array."""
-        row_bin, bins = self.bins
-        bin_pos = np.zeros(self.nv, dtype=np.int64)
-        for rows, _ in bins:
-            bin_pos[rows] = np.arange(len(rows))
+        row_bin, bins, bin_pos = self._binned_layout(source)
         mesh = box_mesh(self.devices)
-        schedule = self._schedule(edge_lists)
+        schedule = self._schedule(edge_lists, boxes=boxes)
         n_shards = len(schedule)
         per_shard = []
         for boxes in schedule:
@@ -1001,21 +1109,33 @@ class TriangleEngine:
             return self._canonical(tris)
         staged = self._staged_source()
         edge_lists = []
+        kept_boxes = []
         for box in boxes:
             eu, ev, _, _ = self._box_edges(box, staged)
             if len(eu):
                 edge_lists.append((eu, ev))
+                kept_boxes.append(box)
         if not edge_lists:
             return np.zeros((0, 3), dtype=np.int64)
         if capacity is None:
             m = sum(len(eu) for eu, _ in edge_lists)
             capacity = max(256, m)
         cap = _pow2(max(2, capacity))
+        if self.degree_bins:
+            # binned sharded listing: per-bin-pair enumeration kernel on
+            # the binned widths (same counts/rows as the unbinned kernel,
+            # padding bounded by the bin growth factor — no fallback)
+            tris = self._list_sharded_binned(edge_lists, cap, staged,
+                                             boxes=kept_boxes)
+            self._io_collect(mark)
+            return self._canonical(tris)
         # the shard slices are identical across capacity rescans: build
         # (and charge) them once, re-run only the kernel on overflow
         mesh = box_mesh(self.devices)
         chunk = min(self.chunk, 1024)
-        slices = self._shard_slices(edge_lists, self._schedule(edge_lists),
+        slices = self._shard_slices(edge_lists,
+                                    self._schedule(edge_lists,
+                                                   boxes=kept_boxes),
                                     pad_multiple=chunk, source=staged)
         while True:
             tris, ok = self._list_sharded(slices, cap, mesh, chunk)
@@ -1067,6 +1187,111 @@ class TriangleEngine:
         if self.device is not None:
             self.device.write_words(3 * len(tris))
         return tris, True
+
+    def _list_sharded_binned(self, edge_lists, cap: int, source=None,
+                             boxes=None) -> np.ndarray:
+        """Sharded listing through the degree-binned layout (the listing
+        analogue of ``_count_sharded_binned``): one ``_list_pairs_chunked``
+        launch per (bin_u, bin_v) width pair, each shard holding only the
+        bin rows its edges reference. The kernel emits *global* (u, v, z)
+        triangles directly, so no local-row remap is needed; per-pair
+        overflow rescans that pair at doubled capacity."""
+        row_bin, bins, bin_pos = self._binned_layout(source)
+        mesh = box_mesh(self.devices)
+        schedule = self._schedule(edge_lists, boxes=boxes)
+        n_shards = len(schedule)
+        per_shard = []
+        for shard_boxes in schedule:
+            if shard_boxes:
+                eu = np.concatenate([edge_lists[b][0] for b in shard_boxes])
+                ev = np.concatenate([edge_lists[b][1] for b in shard_boxes])
+            else:
+                eu = ev = np.zeros(0, np.int64)
+            per_shard.append((eu, ev))
+        self.stats.n_shards = n_shards
+        self.stats.shard_edges = [len(eu) for eu, _ in per_shard]
+
+        pairs = set()
+        for eu, ev in per_shard:
+            if len(eu):
+                live = (row_bin[eu] >= 0) & (row_bin[ev] >= 0)
+                pairs |= set(zip(row_bin[eu[live]].tolist(),
+                                 row_bin[ev[live]].tolist()))
+        chunk = min(self.chunk, 1024)
+        parts: List[np.ndarray] = []
+
+        def launch(npa, npb, eu_l, ev_l, us_l, vs_l, cap_):
+            @jax.jit
+            @partial(shard_map, mesh=mesh,
+                     in_specs=(P("boxes", None, None),
+                               P("boxes", None, None),
+                               P("boxes", None), P("boxes", None),
+                               P("boxes", None), P("boxes", None)),
+                     out_specs=(P("boxes"), P("boxes", None, None)),
+                     check_rep=False)
+            def run(npa, npb, eu, ev, us, vs):
+                total, buf = _list_pairs_chunked(
+                    npa[0], npb[0], eu[0], ev[0], us[0], vs[0],
+                    cap=cap_, chunk=chunk)
+                return total.reshape(1), buf.reshape(1, cap_, 3)
+
+            return run(jnp.asarray(npa), jnp.asarray(npb),
+                       jnp.asarray(eu_l), jnp.asarray(ev_l),
+                       jnp.asarray(us_l), jnp.asarray(vs_l))
+
+        for (i, j) in sorted(pairs):
+            npa_i, npb_j = bins[i][1], bins[j][1]
+            shard_data = []
+            for eu, ev in per_shard:
+                if len(eu) == 0:
+                    shard_data.append((np.zeros(0, np.int64),) * 4)
+                    continue
+                sel = (row_bin[eu] == i) & (row_bin[ev] == j)
+                eu_s, ev_s = eu[sel], ev[sel]
+                ur = np.unique(eu_s)
+                vr = np.unique(ev_s)
+                shard_data.append((eu_s, ev_s, ur, vr))
+            # one all-SENTINEL pad row on BOTH sides: the kernel may swap
+            # the matrices (narrower probes wider) and its pad slots — and
+            # ours — must land on an empty row either way
+            ra = max([len(d[2]) for d in shard_data] + [0]) + 1
+            rb = max([len(d[3]) for d in shard_data] + [0]) + 1
+            lmax = max([len(d[0]) for d in shard_data] + [1])
+            L = -(-lmax // chunk) * chunk
+            ka, kb = npa_i.shape[1], npb_j.shape[1]
+            npa = np.full((n_shards, ra, ka), SENTINEL, np.int32)
+            npb = np.full((n_shards, rb, kb), SENTINEL, np.int32)
+            eu_l = np.full((n_shards, L), ra - 1, np.int32)
+            ev_l = np.full((n_shards, L), rb - 1, np.int32)
+            us_l = np.zeros((n_shards, L), np.int32)
+            vs_l = np.zeros((n_shards, L), np.int32)
+            for s, (eu_s, ev_s, ur, vr) in enumerate(shard_data):
+                if len(eu_s) == 0:
+                    continue
+                npa[s, :len(ur)] = npa_i[bin_pos[ur]]
+                npb[s, :len(vr)] = npb_j[bin_pos[vr]]
+                eu_l[s, :len(eu_s)] = np.searchsorted(ur, eu_s)
+                ev_l[s, :len(ev_s)] = np.searchsorted(vr, ev_s)
+                us_l[s, :len(eu_s)] = eu_s
+                vs_l[s, :len(ev_s)] = ev_s
+            cap_p = cap
+            while True:
+                totals, bufs = launch(npa, npb, eu_l, ev_l, us_l, vs_l,
+                                      cap_p)
+                totals = np.asarray(totals)
+                if not (totals > cap_p).any():
+                    break
+                self.stats.n_rescans += 1
+                cap_p *= 2
+            bufs = np.asarray(bufs)
+            for s in range(len(totals)):
+                if totals[s]:
+                    parts.append(bufs[s, :totals[s]].astype(np.int64))
+        tris = np.concatenate(parts) if parts \
+            else np.zeros((0, 3), np.int64)
+        if self.device is not None:
+            self.device.write_words(3 * len(tris))
+        return tris
 
 
 # ---------------------------------------------------------------------------

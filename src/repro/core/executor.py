@@ -51,6 +51,7 @@ the graph size instead of linear in the box count.
 
 from __future__ import annotations
 
+import inspect
 import threading
 import time
 from collections import OrderedDict
@@ -62,7 +63,8 @@ import numpy as np
 
 from repro.data.pipeline import Prefetcher
 
-from .lftj_jax import SENTINEL, _count_chunked, _list_chunked
+from .lftj_jax import (SENTINEL, _count_chunked, _count_rows_chunked,
+                       _list_chunked, pad_neighbors_binned)
 
 _ROW_BUCKET = 64
 
@@ -509,10 +511,22 @@ class StreamingExecutor:
                  dense_words_cap: int = 64_000_000,
                  stats=None,
                  workers: int = 1,
+                 degree_bins: bool = False,
                  inflight_boxes: Optional[int] = None,
                  inflight_words: Optional[int] = None):
         self.source = source
         self.pick_backend = pick_backend
+        # a box-aware dispatcher (the skew-routing engine) takes the box as
+        # a fourth argument; plain (n_edges, wx, wy) callables keep working
+        try:
+            params = inspect.signature(pick_backend).parameters.values()
+            self._backend_takes_box = any(
+                p.name == "box"
+                or p.kind is inspect.Parameter.VAR_POSITIONAL
+                for p in params)
+        except (TypeError, ValueError):
+            self._backend_takes_box = False
+        self.degree_bins = bool(degree_bins)
         self.chunk = int(chunk)
         self.prefetch_depth = max(1, int(prefetch_depth))
         self.use_pallas_kernels = bool(use_pallas_kernels)
@@ -608,6 +622,30 @@ class StreamingExecutor:
             s.max_slice_words = max(s.max_slice_words, slc.words_read)
             s.max_slice_padded_words = max(s.max_slice_padded_words,
                                            slc.padded_words)
+
+    def _note_padding(self, slc: BoxSlice, extra: int = 0) -> None:
+        """Charge the padded-vs-actual ledger for one finished slice.
+
+        ``padded_words`` counts only *materialized* padded neighbor-matrix
+        words: the lazy ``slc.npad`` is charged iff some backend forced it,
+        plus any per-bin matrices a binned backend built (``extra``). The
+        host and dense lanes never materialize ``npad``, which is exactly
+        the waste the skew-aware planner's A/B measures.
+        """
+        s = self.stats
+        if s is None:
+            return
+        with self._stats_lock:
+            if slc._npad is not None:
+                s.padded_words += slc.padded_words
+            s.padded_words += int(extra)
+            if slc.row_vals is not None:
+                s.actual_words += len(slc.row_vals)
+
+    def _backend_for(self, slc: BoxSlice) -> str:
+        if self._backend_takes_box:
+            return self.pick_backend(slc.n_edges, slc.wx, slc.wy, slc.box)
+        return self.pick_backend(slc.n_edges, slc.wx, slc.wy)
 
     # -- edge padding to bucketed device shapes ------------------------------
 
@@ -707,25 +745,41 @@ class StreamingExecutor:
 
         Columns span only the z values that actually occur in the slice's
         neighbor lists (renumbered), so the one-hot rows scale with the box,
-        not with V. Returns ``None`` when the exact one-hot footprint would
-        exceed ``dense_words_cap`` (e.g. a pinned hub row whose z domain is
-        its full million-neighbor list) — the dispatcher's pre-materialize
-        estimate cannot see the z domain, so the hard cap is enforced here
-        and the caller falls back to the binary backend.
+        not with V. The one-hots are scattered straight from the slice's
+        compact CSR (``row_off``/``row_vals``) — the dense lane never
+        materializes the padded ``npad`` matrix, so a hub box routed here
+        pays zero padded words. Returns ``None`` when the exact one-hot
+        footprint would exceed ``dense_words_cap`` (e.g. a pinned hub row
+        whose z domain is its full million-neighbor list) — the
+        dispatcher's pre-materialize estimate cannot see the z domain, so
+        the hard cap is enforced here and the caller falls back to the
+        binary backend.
         """
-        zdom = np.unique(slc.npad[slc.npad != SENTINEL])
+        off, vals = slc.row_off, slc.row_vals
+        if off is None:
+            # externally-built slices: recover the compact CSR from npad
+            mask = slc.npad != SENTINEL
+            d = mask.sum(axis=1).astype(np.int64)
+            off = np.concatenate([np.zeros(1, np.int64), np.cumsum(d)])
+            vals = slc.npad[mask]
+        zdom = np.unique(vals)
         if len(zdom) == 0:
             return 0
         rows_x = np.unique(slc.eu)
         rows_y = np.unique(slc.ev)
         if (len(rows_x) + len(rows_y)) * len(zdom) > self.dense_words_cap:
             return None
+        deg_all = np.diff(off)
 
         def one_hot(rows_local):
             a = np.zeros((len(rows_local), len(zdom)), dtype=np.float32)
-            sub = slc.npad[rows_local]
-            rr, cc = np.nonzero(sub != SENTINEL)
-            a[rr, np.searchsorted(zdom, sub[rr, cc])] = 1.0
+            d = deg_all[rows_local]
+            n = int(d.sum())
+            if n:
+                rr = np.repeat(np.arange(len(rows_local)), d)
+                idx = np.repeat(off[rows_local], d) + np.arange(n) \
+                    - np.repeat(np.cumsum(d) - d, d)
+                a[rr, np.searchsorted(zdom, vals[idx])] = 1.0
             return a
 
         ax, ay = one_hot(rows_x), one_hot(rows_y)
@@ -744,14 +798,47 @@ class StreamingExecutor:
                               interpret=not self.use_pallas_kernels)
         return int(jnp.sum(out))
 
+    def _count_binned_slice(self, slc: BoxSlice) -> int:
+        """Per-box degree-binned counting: the out-of-core analogue of the
+        engine's global binned path (the ``degree_bins=True`` contract for
+        store-backed sources). The slice's compact CSR rows are grouped into
+        power-of-4 width classes (``pad_neighbors_binned``) and each edge
+        probes its (bin_u, bin_v) pair's matrices via
+        ``_count_rows_chunked`` — pad waste per row is bounded by the bin
+        growth factor instead of the box-local max degree, and the global
+        ``npad`` is never touched."""
+        if slc.n_edges == 0:
+            return 0
+        row_bin, bins = pad_neighbors_binned(slc.row_off, slc.row_vals)
+        bin_pos = np.zeros(max(1, len(row_bin)), dtype=np.int64)
+        extra = 0
+        for rows_b, npad_b in bins:
+            bin_pos[rows_b] = np.arange(len(rows_b))
+            extra += int(npad_b.size)
+        bu = row_bin[slc.eu]
+        bv = row_bin[slc.ev]
+        live = (bu >= 0) & (bv >= 0)   # deg-0 rows intersect to nothing
+        total = 0
+        for i, j in sorted(set(zip(bu[live].tolist(), bv[live].tolist()))):
+            sel = np.flatnonzero(live & (bu == i) & (bv == j))
+            a_rows = bins[i][1][bin_pos[slc.eu[sel]]]
+            b_rows = bins[j][1][bin_pos[slc.ev[sel]]]
+            chunk = min(self.chunk, _pow2(len(sel), lo=256))
+            total += int(_count_rows_chunked(jnp.asarray(a_rows),
+                                             jnp.asarray(b_rows),
+                                             chunk=chunk))
+        self._note_padding(slc, extra=extra)
+        return total
+
     def _count_slice(self, slc: BoxSlice) -> int:
-        be = self.pick_backend(slc.n_edges, slc.wx, slc.wy)
+        be = self._backend_for(slc)
         if be == "dense":
             out = self._count_dense(slc)
             if out is not None:
                 if self.stats is not None:
                     with self._stats_lock:
                         self.stats.n_dense_boxes += 1
+                self._note_padding(slc)
                 return out
             # one-hot footprint over the cap: fall back. The box is above
             # the dense crossover, hence inside the pallas mid-band — keep
@@ -766,10 +853,16 @@ class StreamingExecutor:
                 else:
                     self.stats.n_binary_boxes += 1
         if be == "pallas":
-            return self._count_pallas(slc)
-        if be == "host":
-            return self._count_host(slc)
-        return self._count_binary(slc)
+            out = self._count_pallas(slc)
+        elif be == "host":
+            out = self._count_host(slc)
+        elif self.degree_bins:
+            # binned backends self-record their padded extra
+            return self._count_binned_slice(slc)
+        else:
+            out = self._count_binary(slc)
+        self._note_padding(slc)
+        return out
 
     def _list_slice(self, slc: BoxSlice,
                     capacity: Optional[int]) -> Optional[np.ndarray]:
@@ -795,6 +888,7 @@ class StreamingExecutor:
                 with self._stats_lock:
                     self.stats.n_rescans += 1
             cap *= 2
+        self._note_padding(slc)
         if total == 0:
             return None
         tris = np.asarray(buf[:total], dtype=np.int64)

@@ -262,6 +262,63 @@ def _list_chunked(npad: jnp.ndarray, eu: jnp.ndarray, ev: jnp.ndarray,
     return total, buf[:cap]
 
 
+@partial(jax.jit, static_argnames=("cap", "chunk"))
+def _list_pairs_chunked(npa: jnp.ndarray, npb: jnp.ndarray,
+                        eu: jnp.ndarray, ev: jnp.ndarray,
+                        us: jnp.ndarray, vs: jnp.ndarray,
+                        cap: int, chunk: int = 1024):
+    """Enumerate (us[i], vs[i], z) with z ∈ npa[eu[i]] ∩ npb[ev[i]].
+
+    The degree-binned listing analogue of ``_count_rows_chunked`` +
+    ``_list_chunked``: the two padded neighbor matrices may have different
+    widths (per-bin K), the narrower side is probed into the wider, and the
+    emitted triangle carries the caller-supplied *global* edge endpoints
+    ``us``/``vs`` (so no local-row remap is needed afterwards). Padded edge
+    slots must reference an all-SENTINEL row on the probed side — they then
+    contribute nothing. Returns ``(total, buf)`` with the exact total and a
+    (cap, 3) buffer of the first ``min(total, cap)`` triangles.
+    """
+    if npa.shape[1] > npb.shape[1]:     # z values are symmetric in a∩b
+        npa, npb = npb, npa
+        eu, ev = ev, eu
+    m = eu.shape[0]
+    ka = npa.shape[1]
+    kb = npb.shape[1]
+    n_chunks = (m + chunk - 1) // chunk
+    pad = n_chunks * chunk - m
+    pad_a = jnp.int32(npa.shape[0] - 1)  # caller guarantees SENTINEL row
+    eu_c = jnp.concatenate([eu, jnp.full((pad,), pad_a, eu.dtype)]) \
+        .reshape(n_chunks, chunk)
+    ev_c = jnp.concatenate([ev, jnp.full((pad,), 0, ev.dtype)]) \
+        .reshape(n_chunks, chunk)
+    us_c = jnp.concatenate([us, jnp.zeros((pad,), us.dtype)]) \
+        .reshape(n_chunks, chunk)
+    vs_c = jnp.concatenate([vs, jnp.zeros((pad,), vs.dtype)]) \
+        .reshape(n_chunks, chunk)
+    buf0 = jnp.zeros((cap + 1, 3), jnp.int32)   # spill row swallows overflow
+
+    def body(carry, inp):
+        total, buf = carry
+        u, v, gu, gv = inp
+        a = npa[u]                                # (chunk, ka) candidates
+        b = npb[v]
+        pos = jnp.clip(jax.vmap(jnp.searchsorted)(b, a), 0, kb - 1)
+        hit = (jnp.take_along_axis(b, pos, axis=1) == a) & (a != SENTINEL)
+        flat = hit.reshape(-1)
+        zs = a.reshape(-1)
+        gus = jnp.repeat(gu, ka).astype(jnp.int32)
+        gvs = jnp.repeat(gv, ka).astype(jnp.int32)
+        offs = total + jnp.cumsum(flat) - flat
+        slot = jnp.where(flat, jnp.minimum(offs, cap), cap)
+        buf = buf.at[slot].set(jnp.stack([gus, gvs, zs], axis=1),
+                               mode="drop")
+        return (total + jnp.sum(flat), buf), None
+
+    (total, buf), _ = jax.lax.scan(body, (jnp.int32(0), buf0),
+                                   (eu_c, ev_c, us_c, vs_c))
+    return total, buf[:cap]
+
+
 def triangle_count_vectorized(src: np.ndarray, dst: np.ndarray,
                               orientation: str = "minmax",
                               chunk: int = 2048) -> int:

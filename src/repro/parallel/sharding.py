@@ -316,6 +316,33 @@ def box_queue_order(costs: Sequence[float],
     return lpt_order(costs)
 
 
+def box_mass_costs(indptr: np.ndarray,
+                   boxes: Sequence[Tuple[int, int, int, int]]) -> List[int]:
+    """Per-box *slice mass* (raw CSR words the box's slice provisions),
+    computed from the resident degree index alone: the x-slab's neighbor
+    words plus the y-range's, with the x/y overlap deduped (§5) — the same
+    accounting ``StreamingExecutor._est_slice_words`` uses for its queue
+    window. This is the LPT cost the skew-aware scheduler balances on:
+    under a heavy/light plan, a one-row hub box carries its true hub mass
+    instead of looking as cheap as its edge count."""
+    ip = np.asarray(indptr, dtype=np.int64)
+    nv = len(ip) - 1
+    costs: List[int] = []
+    for (lx, hx, ly, hy) in boxes:
+        lx_, hx_ = max(int(lx), 0), min(int(hx), nv - 1)
+        ly_, hy_ = max(int(ly), 0), min(int(hy), nv - 1)
+        if hx_ < lx_ or hy_ < ly_:
+            costs.append(0)
+            continue
+        words = int(ip[hx_ + 1] - ip[lx_])
+        for seg_lo, seg_hi in ((ly_, min(hy_, lx_ - 1)),
+                               (max(ly_, hx_ + 1), hy_)):
+            if seg_hi >= seg_lo:
+                words += int(ip[seg_hi + 1] - ip[seg_lo])
+        costs.append(words)
+    return costs
+
+
 def balanced_box_schedule(costs: Sequence[float],
                           n_shards: int) -> List[List[int]]:
     """Greedy LPT: assign each box (descending cost) to the least-loaded

@@ -53,7 +53,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.executor import (SliceCache, merge_queue_telemetry,
+from repro.core.executor import (SliceCache, _pow2, merge_queue_telemetry,
                                  run_box_queue)
 from repro.core.iomodel import BlockDevice
 from repro.core.leapfrog import Atom
@@ -80,6 +80,13 @@ class QueryStats:
     rank: int = 0
     n_boxes: int = 0
     n_results: int = 0
+    n_rescans: int = 0                 # bounded-listing overflow rescans
+    # skew-aware planning (skew="heavy_light"): the plan's lane mix
+    skew: str = "uniform"
+    heavy_threshold: int = 0
+    n_hub_boxes: int = 0
+    n_light_boxes: int = 0
+    n_mixed_boxes: int = 0
     # per-box execution
     n_streamed_boxes: int = 0
     slice_words_read: int = 0          # raw CSR words fetched across boxes
@@ -214,6 +221,13 @@ class QueryEngine:
         scheduler knobs — identical semantics to ``TriangleEngine``.
     dim_ratio : per-variable budget weights for the §5 split (default:
         4:1 in favour of the first owned dimension).
+    skew : 'uniform' (default) or 'heavy_light': break each owned
+        dimension's cuts at heavy/light class transitions
+        (``query.planner``), carry a lane per box, and route hub boxes to
+        the kernel intersect lane (on TPU) while light/mixed boxes stay on
+        the host searchsorted lane. Lane mix is recorded in ``QueryStats``.
+    heavy_threshold : hub degree cut for ``skew='heavy_light'``; default
+        √(2·Σdeg)-style per owned dimension.
     """
 
     def __init__(self, query: Query, *,
@@ -230,9 +244,14 @@ class QueryEngine:
                  prefetch_depth: int = 2,
                  dim_ratio: Optional[Dict[str, float]] = None,
                  chunk_entries: int = 4_000_000,
+                 skew: str = "uniform",
+                 heavy_threshold: Optional[int] = None,
                  use_pallas_kernels: Optional[bool] = None):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+        if skew not in ("uniform", "heavy_light"):
+            raise ValueError(
+                f"skew {skew!r} not in ('uniform', 'heavy_light')")
         for a in query.atoms:
             if len(a.vars) != 2:
                 raise ValueError(
@@ -245,6 +264,9 @@ class QueryEngine:
         self.cache_words = int(cache_words)
         self.dim_ratio = dim_ratio
         self.chunk_entries = int(chunk_entries)
+        self.skew = skew
+        self.heavy_threshold = heavy_threshold
+        self._lane: Dict[object, str] = {}
         self.workers = max(1, int(workers))
         self.inflight_boxes = max(1, int(inflight_boxes)) \
             if inflight_boxes is not None else max(2, 2 * self.workers)
@@ -406,9 +428,12 @@ class QueryEngine:
         from the resident degree indexes only."""
         if self._plan_cache is not None \
                 and self._plan_cache[0] == self.mem_words:
-            return self._plan_cache[1]
-        plan = self._plan_uncached()
-        self._plan_cache = (self.mem_words, plan)
+            plan = self._plan_cache[1]
+        else:
+            plan = self._plan_uncached()
+            self._plan_cache = (self.mem_words, plan)
+        self._lane = dict(zip(plan.boxes, plan.lanes)) \
+            if plan.lanes else {}
         return plan
 
     def _plan_uncached(self) -> QueryPlan:
@@ -418,10 +443,13 @@ class QueryEngine:
                       for k, s in self._sources.items()}
         plan = plan_query_boxes(atoms, self.order, rel_indptr,
                                 self.mem_words, dim_ratio=self.dim_ratio,
-                                directions=directions)
+                                directions=directions,
+                                skew=self.skew,
+                                heavy_threshold=self.heavy_threshold)
         if self._nv_all == 0 or all(s.n_edges == 0
                                     for s in self._sources.values()):
             plan.boxes = []
+            plan.lanes = []
         return plan
 
     # -- per-box stages (fetch serialized; build/work parallel) ----------------
@@ -513,15 +541,21 @@ class QueryEngine:
                  for m in self._atoms]
         return (box, bound)
 
-    def _make_join(self, bound, mode: str) -> VectorizedBoxJoin:
+    def _make_join(self, bound, mode: str, lane: Optional[str] = None,
+                   capacity: Optional[int] = None) -> VectorizedBoxJoin:
+        # heavy_light lane routing: hub boxes take the kernel intersect
+        # lane (worthwhile only compiled, i.e. on TPU); light and mixed
+        # boxes are pinned to the host searchsorted lane regardless
         kernel_lane = self.backend == "pallas" or (
-            self.backend == "auto" and self.use_pallas_kernels)
+            self.backend == "auto" and self.use_pallas_kernels
+            and lane not in ("light", "mixed"))
         return VectorizedBoxJoin(
             bound, self.n, mode,
             kernel_lane=kernel_lane and mode == "count",
             use_pallas=True,
             interpret=not self.use_pallas_kernels,
-            chunk_entries=self.chunk_entries)
+            chunk_entries=self.chunk_entries,
+            capacity=capacity)
 
     def _note_join(self, vj: VectorizedBoxJoin) -> None:
         with self._stats_lock:
@@ -533,16 +567,29 @@ class QueryEngine:
                 self.stats.n_host_boxes += 1
 
     def _work_count(self, built) -> int:
-        _box, bound = built
-        vj = self._make_join(bound, "count")
+        box, bound = built
+        vj = self._make_join(bound, "count", lane=self._lane.get(box))
         out = vj.run()
         self._note_join(vj)
         return out
 
-    def _work_list(self, built) -> Optional[np.ndarray]:
-        _box, bound = built
-        vj = self._make_join(bound, "list")
-        vj.run()
+    def _work_list(self, built,
+                   capacity: Optional[int] = None) -> Optional[np.ndarray]:
+        """One box's bindings through the bounded buffer: at most ``cap``
+        rows are materialized per pass; the join's exact count detects
+        overflow, which rescans *this box* at doubled capacity (the
+        triangle executor's box-granular overflow→rescan protocol)."""
+        box, bound = built
+        cap = capacity
+        while True:
+            vj = self._make_join(bound, "list", lane=self._lane.get(box),
+                                 capacity=cap)
+            total = vj.run()
+            if cap is None or total <= cap:
+                break
+            with self._stats_lock:
+                self.stats.n_rescans += 1
+            cap *= 2
         self._note_join(vj)
         rows = vj.bindings()
         if len(rows) == 0:
@@ -557,6 +604,11 @@ class QueryEngine:
         self.stats = QueryStats(order=self.order, rank=plan.rank,
                                 n_boxes=len(plan.boxes),
                                 n_workers=self.workers,
+                                skew=self.skew,
+                                heavy_threshold=plan.heavy_threshold,
+                                n_hub_boxes=plan.lanes.count("hub"),
+                                n_light_boxes=plan.lanes.count("light"),
+                                n_mixed_boxes=plan.lanes.count("mixed"),
                                 source="edgestore" if self._any_store
                                 else "memory")
 
@@ -629,13 +681,24 @@ class QueryEngine:
         self.stats.n_results = total
         return total
 
-    def list(self) -> np.ndarray:
+    def list(self, capacity: Optional[int] = None) -> np.ndarray:
         """All result bindings as an (m, len(head)) int64 array, columns in
-        the query's head order (bag semantics: one row per LFTJ binding)."""
+        the query's head order (bag semantics: one row per LFTJ binding).
+
+        Per-box result buffers are *bounded*: at most ``capacity`` rows
+        materialize per box pass (default derived from ``mem_words`` —
+        the output buffer is part of the §5 working set). A box whose
+        exact count exceeds the buffer rescans at doubled capacity
+        (``stats.n_rescans``), so results stay complete and deterministic
+        while peak result memory respects the budget."""
         plan = self.plan()
         self._reset_stats(plan)
+        cap0 = capacity
+        if cap0 is None and self.mem_words is not None:
+            cap0 = _pow2(max(256, self.mem_words // max(1, self.n)))
         mark = self._io_mark()
-        results = self._run(plan.boxes, self._work_list)
+        results = self._run(plan.boxes,
+                            lambda built: self._work_list(built, cap0))
         self._io_collect(mark)
         parts = [r for r in results if r is not None]
         rows = np.concatenate(parts) if parts \

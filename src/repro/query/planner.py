@@ -51,10 +51,22 @@ class QueryPlan:
     boxes: List[Box]
     budgets: Dict[int, int] = field(default_factory=dict)
     single_box: bool = False
+    # skew="heavy_light" metadata: lanes[i] classifies boxes[i] by the
+    # heavy/light class of its *owned* ranges ("hub"/"light"/"mixed");
+    # heavy_threshold is the hub degree cut the cutter used
+    skew: str = "uniform"
+    lanes: List[str] = field(default_factory=list)
+    heavy_threshold: int = 0
 
     @property
     def n_boxes(self) -> int:
         return len(self.boxes)
+
+    def lane_of(self, box: Box) -> Optional[str]:
+        try:
+            return self.lanes[self.boxes.index(box)]
+        except ValueError:
+            return None
 
 
 def owned_atoms_by_dim(atoms: Sequence[Atom],
@@ -129,13 +141,26 @@ def plan_query_boxes(atoms: Sequence[Atom], order: Sequence[str],
                      dim_ratio: Optional[Dict[str, float]] = None,
                      directions: Optional[Dict[int, int]] = None,
                      monotone_prune: bool = True,
-                     row_overhead: int = 2) -> QueryPlan:
+                     row_overhead: int = 2,
+                     skew: str = "uniform",
+                     heavy_threshold: Optional[int] = None) -> QueryPlan:
     """Box plan for a consistent atom list over resident degree indexes.
 
     ``rel_indptr`` maps relation name -> (V+1)-word CSR prefix sums (the
     resident index of each ``EdgeSource``). Returns boxes as per-dimension
     inclusive (lo, hi) tuples; unowned dimensions span their full domain.
+
+    ``skew="heavy_light"`` classifies each owned dimension's rows heavy
+    (combined degree >= ``heavy_threshold``, default √(2·Σdeg)-style) vs
+    light and breaks that dimension's cuts at class transitions
+    (``core.boxing.class_cuts``), so each box range is pure-class per
+    owned dimension. The plan then carries a lane per box ("hub" = every
+    owned range heavy, "light" = every owned range light, else "mixed")
+    that the executor's dispatch consumes.
     """
+    if skew not in ("uniform", "heavy_light"):
+        raise ValueError(
+            f"skew {skew!r} not in ('uniform', 'heavy_light')")
     order = tuple(order)
     n = len(order)
     owned_lists = owned_atoms_by_dim(atoms, order)
@@ -146,9 +171,46 @@ def plan_query_boxes(atoms: Sequence[Atom], order: Sequence[str],
     nv_all = max((len(ip) - 1 for ip in rel_indptr.values()), default=0)
     full: List[Tuple[int, int]] = [(0, max(0, nv_all - 1))] * n
     plan = QueryPlan(order=order, rank=r, owned_dims=owned, boxes=[],
-                     single_box=True)
+                     single_box=True, skew=skew)
     if nv_all <= 0 or any(len(ip) < 2 for ip in rel_indptr.values()):
         return plan
+
+    def dim_cost_deg(d):
+        """(cost, degree) per row of dim d, combined over owning rels."""
+        rels = []
+        for a in owned_lists[d]:
+            if a.rel not in rels:
+                rels.append(a.rel)
+        nv_d = max(len(rel_indptr[rn]) - 1 for rn in rels)
+        cost = np.zeros(nv_d, dtype=np.int64)
+        deg = np.zeros(nv_d, dtype=np.int64)
+        for rn in rels:
+            c = slice_cost(rel_indptr[rn], row_overhead)
+            cost[:len(c)] += c
+            dd = np.diff(np.asarray(rel_indptr[rn], dtype=np.int64))
+            deg[:len(dd)] += dd
+        return cost, deg
+
+    heavy_by_dim: Dict[int, np.ndarray] = {}
+    if skew == "heavy_light":
+        from repro.core.boxing import heavy_threshold_default
+        thr = 0
+        for d in owned:
+            _, deg = dim_cost_deg(d)
+            t = int(heavy_threshold) if heavy_threshold is not None \
+                else heavy_threshold_default(int(deg.sum()))
+            heavy_by_dim[d] = deg >= t
+            thr = max(thr, t)
+        plan.heavy_threshold = thr
+
+    def lane_for(classes) -> str:
+        """Lane of one box from its owned ranges' classes (None = the
+        range was never classified, e.g. the unbounded single box)."""
+        if classes and all(c is True for c in classes):
+            return "hub"
+        if classes and all(c is False for c in classes):
+            return "light"
+        return "mixed"
 
     # §5 slice dedup at the cost level too: a relation read once per box
     # serves every atom sharing it, so each distinct relation is charged
@@ -157,33 +219,45 @@ def plan_query_boxes(atoms: Sequence[Atom], order: Sequence[str],
                 for ip in rel_indptr.values())
     if mem_words is None or total <= mem_words:
         plan.boxes = [tuple(full)]
+        if skew == "heavy_light":
+            classes = []
+            for d in owned:
+                live = heavy_by_dim[d][dim_cost_deg(d)[1] > 0]
+                if len(live) and live.all():
+                    classes.append(True)
+                elif len(live) and not live.any():
+                    classes.append(False)
+                else:
+                    classes.append(None)
+            plan.lanes = [lane_for(classes)]
         return plan
 
     plan.single_box = False
     budgets = dim_budgets(mem_words, owned, order, dim_ratio)
     plan.budgets = budgets
-    cuts: List[List[Tuple[int, int]]] = []
+    cuts: List[List[Tuple[int, int, Optional[bool]]]] = []
     for d in range(n):
         if d not in budgets:
-            cuts.append([full[d]])
+            cuts.append([(full[d][0], full[d][1], None)])
             continue
-        rels = []
-        for a in owned_lists[d]:
-            if a.rel not in rels:
-                rels.append(a.rel)
-        nv_d = max(len(rel_indptr[rn]) - 1 for rn in rels)
-        cost = np.zeros(nv_d, dtype=np.int64)
-        for rn in rels:
-            c = slice_cost(rel_indptr[rn], row_overhead)
-            cost[:len(c)] += c
-        cuts.append(greedy_degree_cuts(cost, budgets[d]))
+        cost, deg = dim_cost_deg(d)
+        if skew == "heavy_light":
+            from repro.core.boxing import class_cuts
+            cuts.append(class_cuts(cost, budgets[d], heavy_by_dim[d]))
+        else:
+            cuts.append([(lo, hi, None)
+                         for lo, hi in greedy_degree_cuts(cost,
+                                                          budgets[d])])
 
     prune_pairs = monotone_prune_pairs(atoms, order, directions or {}) \
         if monotone_prune else []
     for combo in itertools.product(*cuts):
         if any(combo[v][1] < combo[u][0] for u, v in prune_pairs):
             continue
-        plan.boxes.append(tuple(combo))
+        plan.boxes.append(tuple((lo, hi) for lo, hi, _cls in combo))
+        if skew == "heavy_light":
+            plan.lanes.append(
+                lane_for([combo[d][2] for d in owned]))
     return plan
 
 

@@ -211,6 +211,13 @@ class VectorizedBoxJoin:
     ``mode`` is ``"count"`` or ``"list"``; ``kernel_lane`` lowers the
     innermost two-atom intersection onto ``kernels/intersect`` (Pallas on
     TPU, interpret elsewhere) instead of the host ``searchsorted`` lane.
+
+    ``capacity`` bounds the materialized listing buffer: at most that many
+    binding rows are kept (``emitted``), while ``count`` stays the *exact*
+    result count — the caller detects overflow from ``count > capacity``
+    and rescans at doubled capacity, exactly the triangle engine's
+    overflow→rescan protocol. Emitted rows are always the deterministic
+    prefix of the full binding order, so a rescan extends, never reorders.
     """
 
     def __init__(self, atoms: Sequence[BoundAtom], n_vars: int,
@@ -218,19 +225,22 @@ class VectorizedBoxJoin:
                  kernel_lane: bool = False,
                  use_pallas: bool = True,
                  interpret: bool = True,
-                 chunk_entries: int = 4_000_000):
+                 chunk_entries: int = 4_000_000,
+                 capacity: Optional[int] = None):
         self.n = n_vars
         self.mode = mode
         self.kernel_lane = kernel_lane
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.chunk_entries = int(chunk_entries)
+        self.capacity = None if capacity is None else int(capacity)
         self.by_second: List[List[BoundAtom]] = [[] for _ in range(n_vars)]
         self.by_first: List[List[BoundAtom]] = [[] for _ in range(n_vars)]
         for a in atoms:
             self.by_second[a.second_dim].append(a)
             self.by_first[a.first_dim].append(a)
         self.count = 0
+        self.emitted = 0
         self.rows_out: List[np.ndarray] = []
         self.used_kernel = False
         self.max_frontier = 0
@@ -287,11 +297,20 @@ class VectorizedBoxJoin:
         rep, cand = self._expand(d, cols, bound)
         if len(cand) == 0:
             return
-        new_cols = [c[rep] for c in cols] + [cand.astype(np.int64)]
         if d == self.n - 1:
+            # count is exact regardless of capacity; only the materialized
+            # rows are clipped (deterministic prefix -> rescan-safe)
             self.count += len(cand)
-            self.rows_out.append(np.stack(new_cols, axis=1))
+            take = len(cand)
+            if self.capacity is not None:
+                take = min(take, self.capacity - self.emitted)
+            if take > 0:
+                new_cols = [c[rep[:take]] for c in cols] \
+                    + [cand[:take].astype(np.int64)]
+                self.emitted += take
+                self.rows_out.append(np.stack(new_cols, axis=1))
             return
+        new_cols = [c[rep] for c in cols] + [cand.astype(np.int64)]
         self._eval(d + 1, new_cols)
 
     def _expand(self, d: int, cols: List[np.ndarray],

@@ -323,34 +323,32 @@ class TestNonReplicatedSharding:
 
 
 class TestDegreeBinsFallbacks:
-    def test_store_backed_degree_bins_warns_once(self, tmp_path):
-        """Store-backed engines cannot honor degree_bins (the global
-        binned layout needs the edge list in memory): the knob must warn
-        exactly once — at construction — and never silently change the
-        result; count()/list() emit nothing further."""
+    def test_store_backed_degree_bins_honored_without_warning(self, tmp_path):
+        """Store-backed engines honor degree_bins for real now: per-box
+        slices are re-laid-out into degree bins inside the streaming
+        executor, so the knob neither warns nor changes results — the
+        old warn-and-drop fallback is gone."""
         import warnings
 
         from repro.data.edgestore import write_edge_store
 
         src, dst = rmat_graph(128, 1500, seed=3)
         path = write_edge_store(tmp_path / "g.csr", src, dst)
-        with pytest.warns(UserWarning, match="degree_bins"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")   # any warning fails the test
             eng = TriangleEngine(store=path, mem_words=200,
                                  degree_bins=True)
-        with warnings.catch_warnings(record=True) as rec:
-            warnings.simplefilter("always")
             n = eng.count()
             tris = eng.list()
-        assert [w for w in rec
-                if "degree_bins" in str(w.message)] == []
         assert n == reference_count(src, dst)
         assert len(tris) == n
+        np.testing.assert_array_equal(tris, reference_list(src, dst))
 
-    def test_sharded_listing_unbinned_fallback_matches_binned_count(self):
-        """With shard=True + degree_bins=True the count runs the binned
-        per-bin-pair kernels while listing falls back to the unbinned
-        local-slice path — the two must agree exactly (same triangles,
-        same total)."""
+    def test_sharded_binned_listing_matches_oracle(self):
+        """shard=True + degree_bins=True listing runs the binned per-bin-
+        pair listing kernels (no silent unbinned fallback): the triangles
+        must match the unsharded reference exactly, and the binned count
+        must agree with the listing total."""
         hub = np.zeros(120, dtype=int)
         leaves = np.arange(1, 121)
         src = np.concatenate([hub, [1, 1, 2, 5, 5, 6]])
@@ -358,7 +356,7 @@ class TestDegreeBinsFallbacks:
         eng = TriangleEngine(src, dst, mem_words=120, shard=True,
                              degree_bins=True)
         n_binned = eng.count()
-        tris = eng.list()                    # unbinned fallback
+        tris = eng.list()                    # binned sharded listing
         assert len(tris) == n_binned
         np.testing.assert_array_equal(tris, reference_list(src, dst))
 

@@ -1,0 +1,293 @@
+"""Heavy/light (skew-resistant) box planning: plan invariants by property
+test, engine/query dispatch by oracle pinning.
+
+Three layers, matching the skew="heavy_light" design:
+
+* ``class_cuts`` / ``plan_boxes_heavy_light`` structure — every cut tiles
+  the domain, respects the mass budget (single pinned hubs excepted), and
+  never mixes heavy and light rows in one range (hypothesis).
+* ``TriangleEngine(skew="heavy_light")`` — counts and listings byte-equal
+  to the uniform planner (itself pinned to the scalar LFTJ reference) on
+  RMAT / star / Erdős–Rényi graphs, across workers {1, 4} and slice-cache
+  on/off, with lane telemetry recorded and the padded-words ledger
+  strictly improving on the skewed graph.
+* the three ISSUE-6 bugfix oracles — store-backed ``degree_bins`` staged
+  for real (no warning), sharded binned listing (no silent unbinned
+  fallback), and ``QueryEngine.list()`` through the bounded buffer with
+  overflow→rescan.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (TriangleEngine, TrieArray, class_cuts, classify_heavy,
+                        heavy_threshold_default, lftj_triangle_count,
+                        orient_edges, plan_boxes_heavy_light)
+from repro.data.edgestore import write_edge_store
+from repro.data.graphs import rmat_graph
+from repro.query import QueryEngine, patterns
+
+
+def er_graph(n, p, seed):
+    rng = np.random.default_rng(seed)
+    adj = np.triu(rng.random((n, n)) < p, k=1)
+    src, dst = np.nonzero(adj)
+    return src.astype(np.int64), dst.astype(np.int64)
+
+
+def star_graph(n_leaves=120):
+    """One hub plus a few leaf-leaf edges: the canonical skew adversary."""
+    hub = np.zeros(n_leaves, dtype=int)
+    leaves = np.arange(1, n_leaves + 1)
+    src = np.concatenate([hub, [1, 1, 2, 5, 5, 6]])
+    dst = np.concatenate([leaves, [2, 3, 3, 6, 7, 7]])
+    return src, dst
+
+
+def reference_count(src, dst):
+    a, b = orient_edges(src, dst)
+    return lftj_triangle_count(TrieArray.from_edges(a, b))
+
+
+GRAPHS = {
+    "rmat": rmat_graph(256, 3000, seed=3),
+    "star": star_graph(),
+    "er": er_graph(60, 0.2, seed=5),
+}
+
+
+# ---------------------------------------------------------------------------
+# plan structure (hypothesis)
+# ---------------------------------------------------------------------------
+
+def degree_seqs(max_n=60, max_deg=50):
+    return st.lists(st.integers(0, max_deg), min_size=1, max_size=max_n)
+
+
+class TestClassCuts:
+    @settings(max_examples=50, deadline=None)
+    @given(degree_seqs(), st.integers(4, 200))
+    def test_cuts_tile_budget_and_pure_class(self, degs, budget):
+        deg = np.asarray(degs, dtype=np.int64)
+        cost = np.where(deg > 0, deg + 2, 0)
+        heavy = deg >= heavy_threshold_default(int(deg.sum()))
+        cuts = class_cuts(cost, budget, heavy)
+        # tiling: contiguous, disjoint, covering [0, n)
+        assert cuts[0][0] == 0 and cuts[-1][1] == len(deg) - 1
+        for (l1, h1, _), (l2, h2, _) in zip(cuts, cuts[1:]):
+            assert l2 == h1 + 1
+        for lo, hi, cls in cuts:
+            assert lo <= hi
+            real = np.flatnonzero(cost[lo:hi + 1] > 0)
+            # budget: a range either fits or is a single pinned (spilled) row
+            assert cost[lo:hi + 1].sum() <= budget or len(real) == 1
+            # purity: every costed row in the range shares the range's class
+            assert all(bool(heavy[lo + r]) == cls for r in real)
+
+    def test_zero_cost_rows_are_class_wildcards(self):
+        """Absent rows between two hubs must not fragment the hub run or
+        flip its class."""
+        cost = np.array([90, 0, 0, 90, 1, 1], dtype=np.int64)
+        heavy = np.array([True, False, False, True, False, False])
+        cuts = class_cuts(cost, 200, heavy)
+        # first range is the hub run (wildcards absorbed), then the lights
+        assert cuts[0][:1] == (0,) and cuts[0][2] is True
+        assert cuts[-1][2] is False
+
+
+class TestHeavyLightPlan:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 40), st.integers(0, 40)),
+                    min_size=1, max_size=200),
+           st.integers(24, 400))
+    def test_plan_covers_domain_with_lanes(self, edges, mem):
+        e = np.asarray(edges)
+        a, b = orient_edges(e[:, 0], e[:, 1])
+        if len(a) == 0:
+            return
+        nv = int(max(a.max(), b.max())) + 1
+        indptr = np.zeros(nv + 1, dtype=np.int64)
+        np.add.at(indptr, a + 1, 1)
+        indptr = np.cumsum(indptr)
+        plan = plan_boxes_heavy_light(indptr, mem)
+        assert len(plan.lanes) == len(plan.boxes)
+        assert set(plan.lanes) <= {"hub", "light", "mixed"}
+        assert plan.threshold >= 2
+        heavy, _ = classify_heavy(indptr, plan.threshold)
+        deg = np.diff(indptr)
+        xs = sorted({(lx, hx) for (lx, hx, _, _) in plan.boxes})
+        for (l1, h1), (l2, h2) in zip(xs, xs[1:]):
+            assert h1 < l2                          # disjoint x-intervals
+        for v in np.flatnonzero(deg > 0):           # full coverage
+            assert any(l <= v <= h for (l, h) in xs)
+        # lane faithfulness: a "hub" box has only heavy costed x-rows,
+        # a "light" box only light ones
+        for box, lane in zip(plan.boxes, plan.lanes):
+            lx, hx = box[0], box[1]
+            real = np.flatnonzero(deg[lx:hx + 1] > 0) + lx
+            if lane == "hub":
+                assert heavy[real].all()
+            elif lane == "light":
+                assert not heavy[real].any()
+
+    def test_more_memory_fewer_boxes(self):
+        src, dst = GRAPHS["rmat"]
+        a, b = orient_edges(src, dst)
+        nv = int(max(a.max(), b.max())) + 1
+        indptr = np.zeros(nv + 1, dtype=np.int64)
+        np.add.at(indptr, a + 1, 1)
+        indptr = np.cumsum(indptr)
+        counts = [len(plan_boxes_heavy_light(indptr, m).boxes)
+                  for m in (200, 800, 3200, None)]
+        assert counts[0] >= counts[1] >= counts[2] >= counts[3] == 1
+
+
+# ---------------------------------------------------------------------------
+# engine dispatch: heavy_light == uniform == scalar reference
+# ---------------------------------------------------------------------------
+
+class TestEngineHeavyLightOracle:
+    @pytest.mark.parametrize("gname", sorted(GRAPHS))
+    @pytest.mark.parametrize("workers", [1, 4])
+    def test_count_and_list_match_uniform(self, gname, workers):
+        src, dst = GRAPHS[gname]
+        want = reference_count(src, dst)
+        uni = TriangleEngine(src, dst, mem_words=300, workers=workers)
+        assert uni.count() == want
+        ref_rows = uni.list()
+        hl = TriangleEngine(src, dst, mem_words=300, workers=workers,
+                            skew="heavy_light")
+        assert hl.count() == want
+        np.testing.assert_array_equal(hl.list(), ref_rows)
+        s = hl.stats
+        assert s.skew == "heavy_light" and s.heavy_threshold >= 2
+        assert s.n_hub_boxes + s.n_light_boxes + s.n_mixed_boxes == s.n_boxes
+
+    def test_padded_words_improve_on_rmat(self):
+        """The tentpole gate at test scale: >= 2x fewer materialized
+        padded-matrix words than the uniform planner, same answer."""
+        src, dst = GRAPHS["rmat"]
+        uni = TriangleEngine(src, dst, mem_words=300)
+        hl = TriangleEngine(src, dst, mem_words=300, skew="heavy_light")
+        assert uni.count() == hl.count()
+        assert 2 * hl.stats.padded_words <= uni.stats.padded_words
+        assert uni.stats.padded_words > 0
+        assert hl.stats.actual_words > 0
+
+    @pytest.mark.parametrize("cache_words", [0, 4096])
+    def test_store_backed_heavy_light(self, tmp_path, cache_words):
+        """heavy_light plans from the resident degree index alone, so the
+        store-backed engine takes the same skew-aware plan — cache on and
+        off, counts pinned to the in-memory uniform run."""
+        src, dst = GRAPHS["rmat"]
+        want = reference_count(src, dst)
+        path = write_edge_store(tmp_path / "g.csr", src, dst)
+        eng = TriangleEngine(store=path, mem_words=300, skew="heavy_light",
+                             cache_words=cache_words)
+        assert eng.count() == want
+        assert eng.stats.skew == "heavy_light"
+        assert eng.stats.n_hub_boxes + eng.stats.n_light_boxes \
+            + eng.stats.n_mixed_boxes == eng.stats.n_boxes
+
+    def test_explicit_threshold_knob(self):
+        """heavy_threshold overrides the √(2E) default; an absurdly high
+        threshold degenerates to an all-light plan with uniform's answer."""
+        src, dst = GRAPHS["rmat"]
+        eng = TriangleEngine(src, dst, mem_words=300, skew="heavy_light",
+                             heavy_threshold=1 << 30)
+        assert eng.count() == reference_count(src, dst)
+        assert eng.stats.n_hub_boxes == 0
+
+    def test_invalid_skew_rejected(self):
+        src, dst = GRAPHS["er"]
+        with pytest.raises(ValueError, match="skew"):
+            TriangleEngine(src, dst, skew="nope")
+
+
+# ---------------------------------------------------------------------------
+# ISSUE-6 bugfix oracles
+# ---------------------------------------------------------------------------
+
+class TestBugfixOracles:
+    def test_store_backed_degree_bins_no_warning(self, tmp_path):
+        """Bugfix 1: degree_bins on a store-backed engine stages per-box
+        binned layouts instead of warn-and-drop."""
+        src, dst = GRAPHS["rmat"]
+        path = write_edge_store(tmp_path / "g.csr", src, dst)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            eng = TriangleEngine(store=path, mem_words=200, degree_bins=True)
+            n = eng.count()
+            tris = eng.list()
+        assert n == reference_count(src, dst)
+        assert len(tris) == n
+
+    @pytest.mark.parametrize("gname", ["rmat", "star"])
+    def test_sharded_binned_listing_no_fallback(self, gname):
+        """Bugfix 2: shard=True + degree_bins=True listing runs the binned
+        per-bin-pair kernels and matches the unsharded oracle."""
+        src, dst = GRAPHS[gname]
+        ref = TriangleEngine(src, dst, mem_words=200)
+        ref_rows = ref.list()
+        eng = TriangleEngine(src, dst, mem_words=200, shard=True,
+                             degree_bins=True)
+        np.testing.assert_array_equal(eng.list(), ref_rows)
+
+    def test_query_listing_bounded_with_rescan(self):
+        """Bugfix 3: QueryEngine.list() materializes at most ``capacity``
+        rows per box pass, detects overflow by exact count, and rescans at
+        doubled capacity — results identical, rescans recorded."""
+        src, dst = GRAPHS["rmat"]
+        q = patterns.triangle()
+        ref = QueryEngine.from_graph(q, src, dst, mem_words=400)
+        rows_ref = ref.list()
+        rows_ref = rows_ref[np.lexsort(rows_ref.T[::-1])]
+        eng = QueryEngine.from_graph(q, src, dst, mem_words=400)
+        rows = eng.list(capacity=4)
+        rows = rows[np.lexsort(rows.T[::-1])]
+        np.testing.assert_array_equal(rows, rows_ref)
+        assert eng.stats.n_rescans > 0
+
+    def test_query_default_capacity_from_mem_words(self):
+        """With no explicit capacity the per-box buffer derives from
+        mem_words — results still complete under a tiny budget."""
+        src, dst = GRAPHS["rmat"]
+        q = patterns.triangle()
+        full = QueryEngine.from_graph(q, src, dst).list()
+        full = full[np.lexsort(full.T[::-1])]
+        eng = QueryEngine.from_graph(q, src, dst, mem_words=900)
+        rows = eng.list()
+        rows = rows[np.lexsort(rows.T[::-1])]
+        np.testing.assert_array_equal(rows, full)
+
+
+class TestQueryHeavyLight:
+    @pytest.mark.parametrize("workers", [1, 4])
+    def test_triangle_pattern_matches_uniform(self, workers):
+        src, dst = GRAPHS["rmat"]
+        q = patterns.triangle()
+        uni = QueryEngine.from_graph(q, src, dst, mem_words=400,
+                                     workers=workers)
+        want = uni.count()
+        hl = QueryEngine.from_graph(q, src, dst, mem_words=400,
+                                    workers=workers, skew="heavy_light")
+        assert hl.count() == want
+        s = hl.stats
+        assert s.skew == "heavy_light" and s.heavy_threshold >= 2
+        assert s.n_hub_boxes + s.n_light_boxes + s.n_mixed_boxes == s.n_boxes
+        rows_u = uni.list()
+        rows_h = hl.list()
+        np.testing.assert_array_equal(
+            rows_h[np.lexsort(rows_h.T[::-1])],
+            rows_u[np.lexsort(rows_u.T[::-1])])
+
+    def test_four_clique_matches_uniform(self):
+        src, dst = GRAPHS["er"]
+        q = patterns.four_clique()
+        want = QueryEngine.from_graph(q, src, dst).count()
+        hl = QueryEngine.from_graph(q, src, dst, mem_words=500,
+                                    skew="heavy_light")
+        assert hl.count() == want
