@@ -7,6 +7,13 @@ dominant term (the projected step time if the dominant resource were the
 only cost — the roofline lower bound).
 
 Run after ``python -m repro.launch.dryrun --all``.
+
+Independent of the dry-run artifacts, one measured row compares the fused
+LFTJ megakernel against the staged per-chunk lane on a hub box
+(``roofline/lftj_fused/hub_box``): the launch-bound term — device
+invocations × a fixed per-launch overhead — is what the fused kernel
+collapses, and the ratio is measured by the kernel ledger
+(``benchmarks.kernel_bench.measure_fused_vs_staged``).
 """
 
 from __future__ import annotations
@@ -44,6 +51,19 @@ def fmt_table(rows) -> str:
 
 
 def main(fast: bool = False, dry_dir: Path = DEFAULT_DIR) -> None:
+    # fused-vs-staged launch roofline: needs no dry-run artifacts. At a
+    # typical ~10 us host->device dispatch overhead, per-box launch cost
+    # is proportional to the measured invocation counts — the term the
+    # fused megakernel removes.
+    from .kernel_bench import measure_fused_vs_staged
+
+    ab = measure_fused_vs_staged(fast)
+    emit("roofline/lftj_fused/hub_box", ab["us_fused"],
+         f"bound=launch;staged_launches={ab['staged_launches']};"
+         f"fused_launches={ab['fused_launches']};"
+         f"launch_ratio={ab['launch_ratio']:.1f};"
+         f"fused_mb_in={ab['fused_transfer_bytes']/2**20:.2f}")
+
     rows = load(dry_dir)
     if not rows:
         print("no dry-run artifacts found; run "

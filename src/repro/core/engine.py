@@ -73,7 +73,7 @@ from .lftj_jax import (SENTINEL, _count_chunked, _count_rows_chunked,
                        _row_intersect_count, csr_from_edges, orient_edges,
                        pad_neighbors, pad_neighbors_binned)
 
-BACKENDS = ("auto", "binary", "dense", "pallas", "host")
+BACKENDS = ("auto", "binary", "dense", "pallas", "host", "fused")
 
 # dense-path feasibility guard: one-hot words per box (slice-scaled estimate)
 _DENSE_WORDS_CAP = 64_000_000
@@ -98,6 +98,13 @@ class EngineStats:
     n_binary_boxes: int = 0
     n_pallas_boxes: int = 0
     n_host_boxes: int = 0
+    n_fused_boxes: int = 0             # whole box on the fused megakernel
+    # per-box device ledger (kernels/ledger): launches + padded transfer
+    # bytes across every kernel lane — the measured basis of the fused
+    # kernel's >=10x launch-reduction claim
+    device_invocations: int = 0
+    device_transfer_bytes: int = 0
+    max_box_device_invocations: int = 0
     n_shards: int = 1
     n_rescans: int = 0
     dense_threshold: float = 0.0
@@ -195,35 +202,76 @@ def _crossover_store(data: dict) -> None:
         pass  # a read-only home must never break execution
 
 
+def _active_prefix() -> str:
+    """Calibration namespace of the hardware this process runs on: JAX
+    backend + device kind (e.g. ``cpu:cpu``, ``tpu:TPU v4``). Every
+    crossover entry is keyed under it, so CPU-measured values never leak
+    onto real TPU and vice versa."""
+    dev = jax.devices()[0]
+    return f"{jax.default_backend()}:{getattr(dev, 'device_kind', '?')}"
+
+
+_remeasure_handled = False
+
+
+def _maybe_clear_remeasure() -> None:
+    """``REPRO_CROSSOVER_REMEASURE=1``: drop the *active* backend's
+    cached entries once per process (other backends' calibrations in the
+    shared file survive), then fall through to normal measure-and-persist
+    — so a forced remeasure happens once, not on every call."""
+    global _remeasure_handled
+    if _remeasure_handled:
+        return
+    _remeasure_handled = True
+    if os.environ.get("REPRO_CROSSOVER_REMEASURE", "") in ("", "0"):
+        return
+    prefix = _active_prefix() + ":"
+    data = _crossover_load()
+    kept = {k: v for k, v in data.items() if not k.startswith(prefix)}
+    if len(kept) != len(data):
+        _crossover_store(kept)
+    for k in list(_crossover_memo):
+        if k.startswith(prefix):
+            del _crossover_memo[k]
+
+
+def _cached_crossover(suffix: str, nv: int, measure) -> float:
+    """Process-memoized, file-persisted crossover for the active backend:
+    ``measure()`` runs only when neither the memo nor the JSON cache has a
+    valid entry for ``<backend>:<device_kind>:nv<nv><suffix>``."""
+    _maybe_clear_remeasure()
+    key = f"{_active_prefix()}:nv{nv}{suffix}"
+    if key in _crossover_memo:
+        return _crossover_memo[key]
+    cached = _crossover_load().get(key)
+    if isinstance(cached, (int, float)) and 0.0 < cached <= 1.0:
+        _crossover_memo[key] = float(cached)
+        return float(cached)
+    value = measure()
+    _crossover_memo[key] = value
+    data = _crossover_load()
+    data[key] = value
+    _crossover_store(data)
+    return value
+
+
 def measure_dense_crossover(nv: int = 256, repeats: int = 3,
                             seed: int = 0) -> float:
     """Lowest box density where the dense MXU formulation beats the
     binary-search backend, measured once per (jax backend, device kind).
 
     The measurement is persisted to a JSON cache
-    (``$REPRO_CACHE_DIR/crossover.json``, default ``~/.cache/repro``) so a
-    fleet of processes on the same hardware calibrates once, not per
-    process. Set ``REPRO_CROSSOVER_REMEASURE=1`` to force a fresh
-    measurement (e.g. after a driver/runtime upgrade); the new value
-    overwrites the cached one. Falls back to 1.0 (never dense) only if
-    dense never wins on the sampled grid.
+    (``$REPRO_CACHE_DIR/crossover.json``, default ``~/.cache/repro``)
+    keyed by backend + device kind so a fleet of processes on the same
+    hardware calibrates once, not per process — and a CPU-measured value
+    is never consulted on TPU. Set ``REPRO_CROSSOVER_REMEASURE=1`` to
+    drop the active backend's entries and measure fresh (e.g. after a
+    driver/runtime upgrade); other backends' entries are untouched. Falls
+    back to 1.0 (never dense) only if dense never wins on the sampled
+    grid.
     """
-    dev = jax.devices()[0]
-    key = f"{jax.default_backend()}:{getattr(dev, 'device_kind', '?')}:nv{nv}"
-    force = os.environ.get("REPRO_CROSSOVER_REMEASURE", "") not in ("", "0")
-    if not force:
-        if key in _crossover_memo:
-            return _crossover_memo[key]
-        cached = _crossover_load().get(key)
-        if isinstance(cached, (int, float)) and 0.0 < cached <= 1.0:
-            _crossover_memo[key] = float(cached)
-            return float(cached)
-    value = _measure_dense_crossover(nv, repeats, seed)
-    _crossover_memo[key] = value
-    data = _crossover_load()
-    data[key] = value
-    _crossover_store(data)
-    return value
+    return _cached_crossover(
+        "", nv, lambda: _measure_dense_crossover(nv, repeats, seed))
 
 
 def _measure_dense_crossover(nv: int, repeats: int, seed: int) -> float:
@@ -277,24 +325,10 @@ def measure_pallas_crossover(nv: int = 256, repeats: int = 3,
     additionally gates the band on ``use_pallas_kernels``, so this value
     only steers dispatch on real TPU hardware.
     """
-    dev = jax.devices()[0]
-    key = (f"{jax.default_backend()}:{getattr(dev, 'device_kind', '?')}"
-           f":nv{nv}:pallas")
-    force = os.environ.get("REPRO_CROSSOVER_REMEASURE", "") not in ("", "0")
-    if not force:
-        if key in _crossover_memo:
-            return _crossover_memo[key]
-        cached = _crossover_load().get(key)
-        if isinstance(cached, (int, float)) and 0.0 < cached <= 1.0:
-            _crossover_memo[key] = float(cached)
-            return float(cached)
-    value = 1.0 if jax.default_backend() != "tpu" \
-        else _measure_pallas_crossover(nv, repeats, seed)
-    _crossover_memo[key] = value
-    data = _crossover_load()
-    data[key] = value
-    _crossover_store(data)
-    return value
+    return _cached_crossover(
+        ":pallas", nv,
+        lambda: 1.0 if jax.default_backend() != "tpu"
+        else _measure_pallas_crossover(nv, repeats, seed))
 
 
 def _measure_pallas_crossover(nv: int, repeats: int, seed: int) -> float:
@@ -332,6 +366,63 @@ def _measure_pallas_crossover(nv: int, repeats: int, seed: int) -> float:
     return crossover
 
 
+def measure_fused_crossover(nv: int = 256, repeats: int = 3,
+                            seed: int = 0) -> float:
+    """Lowest box density where the fused per-box LFTJ megakernel
+    (``kernels/lftj_fused``) beats the binary-search backend on a whole
+    triangle box — the calibration behind the ``fused_threshold``
+    dispatch knob.
+
+    Persisted next to the dense and pallas crossovers in the same
+    backend-keyed JSON cache (key suffix ``:fused``);
+    ``REPRO_CROSSOVER_REMEASURE=1`` refreshes the active backend only.
+    Off-TPU the megakernel runs in interpret mode, never competitively,
+    so the measurement short-circuits to 1.0 (band never active) without
+    timing the interpreter.
+    """
+    return _cached_crossover(
+        ":fused", nv,
+        lambda: 1.0 if jax.default_backend() != "tpu"
+        else _measure_fused_crossover(nv, repeats, seed))
+
+
+def _measure_fused_crossover(nv: int, repeats: int, seed: int) -> float:
+    from repro.kernels.lftj_fused.ops import fused_count
+
+    rng = np.random.default_rng(seed)
+    densities = (0.005, 0.01, 0.02, 0.05, 0.10, 0.20)
+    crossover = 1.0
+    dims = ((0, 1), (0, 2), (1, 2))
+    for d in densities:
+        adj = np.triu(rng.random((nv, nv)) < d, k=1)
+        src, dst = np.nonzero(adj)
+        if len(src) == 0:
+            continue
+        indptr, indices = csr_from_edges(src, dst, n_nodes=nv)
+        npad = jnp.asarray(pad_neighbors(indptr, indices))
+        eu = jnp.asarray(src, jnp.int32)
+        ev = jnp.asarray(dst, jnp.int32)
+        keys = np.flatnonzero(np.diff(indptr) > 0).astype(np.int64)
+        off = np.concatenate(
+            [[0], np.cumsum(np.diff(indptr)[keys])]).astype(np.int64)
+        csr = (keys, off, np.asarray(indices, np.int32))
+        csrs = [csr, csr, csr]
+
+        def t_binary():
+            _count_chunked(npad, eu, ev, chunk=2048).block_until_ready()
+
+        def t_fused():
+            fused_count(dims, csrs, 3, interpret=False)
+
+        t_binary(); t_fused()  # compile outside the timed region
+        tb = min(_time(t_binary) for _ in range(repeats))
+        tf = min(_time(t_fused) for _ in range(repeats))
+        if tf < tb:
+            crossover = d
+            break
+    return crossover
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -362,10 +453,13 @@ class TriangleEngine:
     orientation : 'minmax' (paper §2.3) or 'degree' (√|E| out-degree cap).
         Store-backed graphs carry their orientation in the file header.
     backend : 'auto' (density dispatch), or force 'binary' / 'dense' /
-        'pallas' / 'host' for every box ('host' is the pure-numpy
-        binary-search lane — the GIL-releasing backend the async
-        scheduler's worker threads scale with on CPU hosts, where XLA
-        serializes concurrent executions).
+        'pallas' / 'host' / 'fused' for every box ('host' is the
+        pure-numpy binary-search lane — the GIL-releasing backend the
+        async scheduler's worker threads scale with on CPU hosts, where
+        XLA serializes concurrent executions; 'fused' dispatches each
+        whole box to the ``kernels/lftj_fused`` megakernel — one device
+        invocation per box, interpret mode off-TPU — falling back per box
+        to pallas/binary when outside the kernel's envelope).
     dense_threshold : box edge-density above which 'auto' picks the dense
         MXU formulation; the string 'measured' uses the persisted
         calibration (``measure_dense_crossover``).
@@ -374,6 +468,12 @@ class TriangleEngine:
         ``dense_threshold / 4``; the string 'measured' uses the persisted
         calibration (``measure_pallas_crossover``, cached in the same
         ``crossover.json`` as the dense crossover).
+    fused_threshold : density above which 'auto' prefers the fused
+        per-box megakernel over the staged pallas band (TPU only).
+        Default ``None`` keeps density dispatch off the fused lane
+        (heavy/light hub boxes still route to it on TPU); the string
+        'measured' uses the persisted ``measure_fused_crossover``
+        calibration (key suffix ``:fused`` in the same cache).
     degree_bins : bin vertices by degree (power-of-4 widths) so padding is
         per-bin instead of global K = max degree (skewed graphs). In-memory
         engines run the global binned layout; store-backed engines bin
@@ -386,8 +486,10 @@ class TriangleEngine:
         'heavy_light': classify vertices heavy (degree >= heavy_threshold)
         vs light from the resident degree index and break every box range
         at class transitions, so each box is pure-class per axis. Hub-hub
-        boxes (near-dense by construction) route to the dense/Pallas
-        lanes; light and mixed boxes route to the host searchsorted lane,
+        boxes (near-dense by construction) route to the dense lane, or to
+        the fused megakernel when the one-hot footprint cannot fit and the
+        platform compiles Pallas; light and mixed boxes route to the host
+        searchsorted lane,
         which never materializes a padded matrix. Lane decisions are
         recorded in ``EngineStats`` (``n_hub_boxes`` / ``n_light_boxes`` /
         ``n_mixed_boxes``, ``padded_words`` vs ``actual_words``) for exact
@@ -427,6 +529,7 @@ class TriangleEngine:
                  backend: str = "auto",
                  dense_threshold=0.05,
                  pallas_threshold=None,
+                 fused_threshold=None,
                  degree_bins: bool = False,
                  skew: str = "uniform",
                  heavy_threshold: Optional[int] = None,
@@ -472,6 +575,13 @@ class TriangleEngine:
             pallas_threshold = measure_pallas_crossover()
         self.pallas_threshold = self.dense_threshold / 4.0 \
             if pallas_threshold is None else float(pallas_threshold)
+        # density gate of the fused megakernel lane: None disables the
+        # density route (hub boxes still take it on TPU), 'measured' uses
+        # the :fused calibration from the same backend-keyed cache
+        if fused_threshold == "measured":
+            fused_threshold = measure_fused_crossover()
+        self.fused_threshold = None if fused_threshold is None \
+            else float(fused_threshold)
 
         if store is not None:
             if src is not None or dst is not None:
@@ -725,7 +835,10 @@ class TriangleEngine:
                 est_cols = min(self.nv, 16 * max(1, n_edges))
                 if est_rows * est_cols <= _DENSE_WORDS_CAP:
                     return "dense"
-                return "pallas" if self.use_pallas_kernels else "binary"
+                # hub boxes too big for the one-hot footprint dispatch
+                # whole to the fused megakernel (compiled TPU only): one
+                # launch instead of one per frontier level
+                return "fused" if self.use_pallas_kernels else "binary"
             return "host"
         density = n_edges / max(1, wx * wy)
         # feasibility of the dense one-hots: the executor compacts rows to
@@ -738,6 +851,9 @@ class TriangleEngine:
         if density > self.dense_threshold \
                 and est_rows * est_cols <= _DENSE_WORDS_CAP:
             return "dense"
+        if self.use_pallas_kernels and self.fused_threshold is not None \
+                and density > self.fused_threshold:
+            return "fused"
         if self.use_pallas_kernels \
                 and density > self.pallas_threshold:
             return "pallas"

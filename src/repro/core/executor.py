@@ -62,6 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import Prefetcher
+from repro.kernels import ledger as kernel_ledger
 
 from .lftj_jax import (SENTINEL, _count_chunked, _count_rows_chunked,
                        _list_chunked, pad_neighbors_binned)
@@ -830,8 +831,86 @@ class StreamingExecutor:
         self._note_padding(slc, extra=extra)
         return total
 
+    def _count_fused(self, slc: BoxSlice) -> Optional[int]:
+        """Whole-box triangle count in ONE device invocation: the fused
+        Pallas frontier megakernel (``kernels.lftj_fused``). The triangle
+        query ships as three box-restricted atoms in compact CSR form —
+        the in-box edge list as R(x, y) plus the slice's neighbor lists
+        re-keyed by the edge endpoints as S(x, z) and T(y, z) — so the
+        entire per-level frontier leapfrog runs on-device instead of one
+        staged launch per chunk. Returns ``None`` when the padded box
+        falls outside the kernel's VMEM envelope; the caller falls back
+        to the staged lanes."""
+        if slc.n_edges == 0:
+            return 0
+        from repro.kernels.lftj_fused.ops import FusedUnsupported, fused_count
+        off, vals = slc.row_off, slc.row_vals
+        if off is None:
+            # externally-built slices: recover the compact CSR from npad
+            mask = slc.npad != SENTINEL
+            deg = mask.sum(axis=1).astype(np.int64)
+            off = np.concatenate([np.zeros(1, np.int64), np.cumsum(deg)])
+            vals = slc.npad[mask]
+        deg = np.diff(off)
+
+        def sub_csr(local_rows: np.ndarray):
+            d = deg[local_rows]
+            n = int(d.sum())
+            so = np.concatenate([np.zeros(1, np.int64),
+                                 np.cumsum(d, dtype=np.int64)])
+            if n == 0:
+                return so, vals[:0]
+            r0 = np.repeat(off[local_rows], d)
+            within = np.arange(n) - np.repeat(np.cumsum(d) - d, d)
+            return so, vals[r0 + within]
+
+        # R(x, y): the in-box edges, grouped by global source id (rows is
+        # sorted, so local-id order == global-id order)
+        gu = slc.rows[slc.eu]
+        gv = slc.rows[slc.ev]
+        order = np.lexsort((gv, gu))
+        gu_s, gv_s = gu[order], gv[order]
+        keys0, counts0 = np.unique(gu_s, return_counts=True)
+        off0 = np.concatenate([np.zeros(1, np.int64),
+                               np.cumsum(counts0, dtype=np.int64)])
+        uniq_u = np.unique(slc.eu)
+        uniq_v = np.unique(slc.ev)
+        off1, vals1 = sub_csr(uniq_u)
+        off2, vals2 = sub_csr(uniq_v)
+        csrs = ((keys0, off0, gv_s),
+                (slc.rows[uniq_u], off1, vals1),
+                (slc.rows[uniq_v], off2, vals2))
+        try:
+            return fused_count(((0, 1), (0, 2), (1, 2)), csrs, 3,
+                               interpret=not self.use_pallas_kernels)
+        except FusedUnsupported:
+            return None
+
     def _count_slice(self, slc: BoxSlice) -> int:
+        with kernel_ledger.attach() as kl:
+            out = self._count_slice_dispatch(slc)
+        if self.stats is not None and kl.invocations:
+            with self._stats_lock:
+                self.stats.device_invocations += kl.invocations
+                self.stats.device_transfer_bytes += kl.transfer_bytes
+                self.stats.max_box_device_invocations = max(
+                    self.stats.max_box_device_invocations, kl.invocations)
+        return out
+
+    def _count_slice_dispatch(self, slc: BoxSlice) -> int:
         be = self._backend_for(slc)
+        if be == "fused":
+            out = self._count_fused(slc)
+            if out is not None:
+                if self.stats is not None:
+                    with self._stats_lock:
+                        self.stats.n_fused_boxes += 1
+                self._note_padding(slc)
+                return out
+            # box outside the fused VMEM envelope: fall back to the
+            # staged kernel lane (same launch cadence as before the
+            # megakernel existed)
+            be = "pallas" if self.use_pallas_kernels else "binary"
         if be == "dense":
             out = self._count_dense(slc)
             if out is not None:

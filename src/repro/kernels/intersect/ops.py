@@ -6,33 +6,56 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ledger
+
 from .kernel import SENTINEL, intersect_count_pallas
 from .ref import intersect_count_ref
+
+# distinct padded shape signatures seen so far — one jit program each.
+# Power-of-two bucketing below bounds this at O(log E · log K) per lane
+# instead of one program per exact padded shape; GIL-atomic set.add keeps
+# it safe under the multi-worker box scheduler.
+_shape_signatures: set = set()
+
+
+def _pow2(n: int, lo: int = 1) -> int:
+    return max(lo, 1 << int(np.ceil(np.log2(max(1, n)))))
+
+
+def jit_cache_info() -> int:
+    """Number of distinct compiled-program shape signatures
+    (kernel_bench reports this so cache growth is visible in CI)."""
+    return len(_shape_signatures)
 
 
 def intersect_count(a, b, *, be: int = 256, use_pallas: bool = True,
                     interpret: bool | None = None) -> jnp.ndarray:
     """Per-row sorted-set intersection counts |a_i ∩ b_i|.
 
-    Pads rows with SENTINEL to a lane multiple and the row count to ``be``;
-    padded rows return 0 and are stripped. ``be`` shrinks (to a sublane
-    multiple) for small batches so a per-box call from the triangle engine
-    never pads a handful of edges up to a full 256-row tile."""
+    Pads rows with SENTINEL to a power-of-two lane count (>= 128) and the
+    row count to a power-of-two multiple of ``be`` — bucketed shapes, so
+    the jit cache holds O(log E · log K) programs instead of one per
+    exact padded shape (the ``core/executor.py`` bucketing idiom).
+    Padded rows return 0 and are stripped. ``be`` shrinks for small
+    batches so a per-box call from the triangle engine never pads a
+    handful of edges up to a full 256-row tile."""
     a = jnp.asarray(a, jnp.int32)
     b = jnp.asarray(b, jnp.int32)
     e, ka = a.shape
     kb = b.shape[1]
-    k = int(np.ceil(max(ka, kb, 1) / 128)) * 128
-    be = min(be, int(np.ceil(max(e, 1) / 8)) * 8)
-    ep = int(np.ceil(max(e, 1) / be)) * be
+    k = _pow2(max(ka, kb, 1), lo=128)
+    be = min(be, _pow2(max(e, 1), lo=8))      # both pow2 -> ep % be == 0
+    ep = _pow2(max(e, 1), lo=be)
     a = jnp.pad(a, ((0, ep - e), (0, k - ka)), constant_values=SENTINEL)
     b = jnp.pad(b, ((0, ep - e), (0, k - kb)), constant_values=SENTINEL)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    _shape_signatures.add((ep, k, be, bool(use_pallas), bool(interpret)))
     if not use_pallas:
         out = intersect_count_ref(a, b)
     else:
         out = intersect_count_pallas(a, b, be=be, interpret=interpret)
+    ledger.note(1, bytes_in=2 * ep * k * 4, bytes_out=ep * 4)
     return out[:e]
 
 

@@ -1,0 +1,70 @@
+"""Per-box device-invocation / transfer-bytes ledger for the kernel lanes.
+
+The fused-megakernel PR makes a quantitative claim — one device dispatch
+per box instead of one per frontier level — so the dispatch count has to
+be *measured*, not asserted. Every kernel wrapper (``kernels/intersect``,
+``kernels/lftj_fused``) calls :func:`note` once per device program it
+launches, with the padded host→device and device→host byte counts it
+shipped. Executors attach a :class:`KernelLedger` around each box's join
+and fold the totals into ``EngineStats`` / ``QueryStats``.
+
+The attachment is thread-local so the multi-worker box scheduler's
+concurrent joins each see only their own box's launches; ledgers nest
+(an outer run-level ledger and an inner per-box one both accumulate), and
+:func:`note` is a no-op when nothing is attached, so the kernels stay
+usable standalone.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import List, Optional
+
+
+class KernelLedger:
+    """Accumulated device launches and padded transfer bytes."""
+
+    __slots__ = ("invocations", "bytes_in", "bytes_out")
+
+    def __init__(self) -> None:
+        self.invocations = 0
+        self.bytes_in = 0
+        self.bytes_out = 0
+
+    @property
+    def transfer_bytes(self) -> int:
+        return self.bytes_in + self.bytes_out
+
+
+_tls = threading.local()
+
+
+def _stack() -> List[KernelLedger]:
+    stack = getattr(_tls, "stack", None)
+    if stack is None:
+        stack = _tls.stack = []
+    return stack
+
+
+class attach:
+    """Context manager scoping kernel launches to ``ledger`` (current
+    thread only). ``with attach() as kl: ...`` creates a fresh ledger."""
+
+    def __init__(self, ledger: Optional[KernelLedger] = None):
+        self.ledger = ledger if ledger is not None else KernelLedger()
+
+    def __enter__(self) -> KernelLedger:
+        _stack().append(self.ledger)
+        return self.ledger
+
+    def __exit__(self, *exc) -> bool:
+        _stack().pop()
+        return False
+
+
+def note(invocations: int = 1, bytes_in: int = 0, bytes_out: int = 0) -> None:
+    """Record ``invocations`` device launches on every attached ledger."""
+    for kl in _stack():
+        kl.invocations += invocations
+        kl.bytes_in += bytes_in
+        kl.bytes_out += bytes_out

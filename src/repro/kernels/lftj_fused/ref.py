@@ -1,0 +1,97 @@
+"""Scalar numpy reference for the fused per-box frontier leapfrog.
+
+Same program the Pallas megakernel (``kernel.py``) executes, written as a
+plain depth-first recursion over one box's atom slices — the oracle the
+hypothesis suite pins the device lane against. An atom is a box-restricted
+binary relation in compact CSR form ``(keys, off, vals)`` with ``keys``
+the sorted first-variable vertex ids and ``vals`` the concatenated sorted
+adjacency; ``atom_dims[i] = (first_dim, second_dim)`` places atom ``i`` in
+the variable order (``first_dim < second_dim``, the orientation the
+QueryEngine's planner guarantees).
+
+Semantics per depth ``d >= 1``: candidates are the adjacency row of the
+first atom bound at ``d`` (first atom with ``second_dim == d``), pruned by
+row membership in every further bound atom. Depth 0 candidates are the
+key-set intersection of the atoms *starting* at 0. Key filters for
+``first_dim >= 1`` atoms are applied implicitly — a binding whose row is
+absent from a later atom's key set gathers an empty row there and dies at
+that atom's ``second_dim`` — which is exactly how the device kernel's
+SENTINEL-filled gather handles them.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+SENTINEL = np.iinfo(np.int32).max
+
+
+def _row(csr, v: int) -> np.ndarray:
+    keys, off, vals = csr
+    i = int(np.searchsorted(keys, v))
+    if i >= len(keys) or keys[i] != v:
+        return np.zeros(0, np.int64)
+    return np.asarray(vals[off[i]:off[i + 1]], dtype=np.int64)
+
+
+def fused_ref(atom_dims: Sequence[Tuple[int, int]],
+              atom_csrs: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]],
+              n_vars: int, mode: str = "count",
+              ) -> Tuple[int, Optional[np.ndarray]]:
+    """(exact count, bindings or None) of the box join.
+
+    ``mode == "list"`` materializes every binding as a row of an
+    ``(count, n_vars)`` int64 matrix, in depth-first binding order."""
+    by_second: List[List[int]] = [[] for _ in range(n_vars)]
+    by_first: List[List[int]] = [[] for _ in range(n_vars)]
+    for ai, (fd, sd) in enumerate(atom_dims):
+        if not 0 <= fd < sd < n_vars:
+            raise ValueError(f"atom {ai}: bad dims ({fd}, {sd})")
+        by_second[sd].append(ai)
+        by_first[fd].append(ai)
+
+    def key_intersection(d: int) -> np.ndarray:
+        cand: Optional[np.ndarray] = None
+        for ai in by_first[d]:
+            keys = np.asarray(atom_csrs[ai][0], dtype=np.int64)
+            cand = keys if cand is None else cand[np.isin(cand, keys)]
+        return cand if cand is not None else np.zeros(0, np.int64)
+
+    cand0 = key_intersection(0)
+    count = 0
+    rows: List[List[int]] = []
+
+    def expand(d: int, binding: List[int]) -> np.ndarray:
+        if not by_second[d]:
+            # starts-only depth: binding-independent constant candidates
+            return key_intersection(d)
+        cand: Optional[np.ndarray] = None
+        for ai in by_second[d]:
+            r = _row(atom_csrs[ai], binding[atom_dims[ai][0]])
+            cand = r if cand is None else cand[np.isin(cand, r)]
+            if len(cand) == 0:
+                break
+        return cand if cand is not None else np.zeros(0, np.int64)
+
+    def rec(d: int, binding: List[int]) -> None:
+        nonlocal count
+        cand = expand(d, binding)
+        if d == n_vars - 1:
+            count += len(cand)
+            if mode == "list":
+                for v in cand:
+                    rows.append(binding + [int(v)])
+            return
+        for v in cand:
+            rec(d + 1, binding + [int(v)])
+
+    for v in cand0:
+        rec(1, [int(v)])
+
+    if mode != "list":
+        return count, None
+    out = (np.asarray(rows, dtype=np.int64).reshape(count, n_vars)
+           if count else np.zeros((0, n_vars), np.int64))
+    return count, out

@@ -63,10 +63,12 @@ from repro.data.edgestore import EdgeStore, InMemoryEdgeSource
 from repro.data.pipeline import Prefetcher
 from repro.parallel.sharding import box_queue_order
 
+from repro.kernels import ledger as kernel_ledger
+
 from .planner import QueryPlan, plan_query_boxes
 from .vectorized import BoundAtom, VectorizedBoxJoin, build_atom_slice
 
-BACKENDS = ("auto", "host", "pallas")
+BACKENDS = ("auto", "host", "pallas", "fused")
 
 
 @dataclass
@@ -94,6 +96,13 @@ class QueryStats:
     max_frontier: int = 0              # peak binding-frontier rows
     n_kernel_boxes: int = 0            # innermost pair on kernels/intersect
     n_host_boxes: int = 0              # innermost stage on the host lane
+    n_fused_boxes: int = 0             # whole box on the fused megakernel
+    # per-box device ledger (kernels/ledger): launches + padded transfer
+    # bytes across every kernel lane — the measured basis of the fused
+    # kernel's >=10x launch-reduction claim
+    device_invocations: int = 0
+    device_transfer_bytes: int = 0
+    max_box_device_invocations: int = 0
     # async scheduler (workers > 1)
     n_workers: int = 1
     inflight_boxes: int = 0
@@ -215,17 +224,20 @@ class QueryEngine:
     device : ``core.iomodel.BlockDevice`` charging source reads; defaults
         to a fresh device for store-backed runs, ``None`` in memory.
     backend : 'auto' (kernel lane on TPU, host lane otherwise), 'host'
-        (pure numpy), or 'pallas' (force the kernels/intersect lowering,
-        interpret off-TPU).
+        (pure numpy), 'pallas' (force the kernels/intersect lowering,
+        interpret off-TPU), or 'fused' (force whole-box dispatch to the
+        ``kernels/lftj_fused`` megakernel — one device invocation per
+        box; boxes outside its envelope fall back to the staged path).
     workers / inflight_boxes / prefetch_depth : the shared PR-4 box
         scheduler knobs — identical semantics to ``TriangleEngine``.
     dim_ratio : per-variable budget weights for the §5 split (default:
         4:1 in favour of the first owned dimension).
     skew : 'uniform' (default) or 'heavy_light': break each owned
         dimension's cuts at heavy/light class transitions
-        (``query.planner``), carry a lane per box, and route hub boxes to
-        the kernel intersect lane (on TPU) while light/mixed boxes stay on
-        the host searchsorted lane. Lane mix is recorded in ``QueryStats``.
+        (``query.planner``), carry a lane per box, and route hub boxes
+        whole to the fused megakernel (on TPU) while light/mixed boxes
+        stay on the host searchsorted lane. Lane mix is recorded in
+        ``QueryStats``.
     heavy_threshold : hub degree cut for ``skew='heavy_light'``; default
         √(2·Σdeg)-style per owned dimension.
     """
@@ -543,9 +555,14 @@ class QueryEngine:
 
     def _make_join(self, bound, mode: str, lane: Optional[str] = None,
                    capacity: Optional[int] = None) -> VectorizedBoxJoin:
-        # heavy_light lane routing: hub boxes take the kernel intersect
-        # lane (worthwhile only compiled, i.e. on TPU); light and mixed
-        # boxes are pinned to the host searchsorted lane regardless
+        # heavy_light lane routing: hub boxes dispatch whole to the fused
+        # megakernel (worthwhile only compiled, i.e. on TPU), falling
+        # back per box to the staged path when outside its envelope;
+        # light and mixed boxes are pinned to the host searchsorted lane.
+        # backend="fused" forces the fused lane for every box.
+        fused = self.backend == "fused" or (
+            self.backend == "auto" and self.use_pallas_kernels
+            and lane == "hub")
         kernel_lane = self.backend == "pallas" or (
             self.backend == "auto" and self.use_pallas_kernels
             and lane not in ("light", "mixed"))
@@ -554,23 +571,33 @@ class QueryEngine:
             kernel_lane=kernel_lane and mode == "count",
             use_pallas=True,
             interpret=not self.use_pallas_kernels,
+            device="fused" if fused else "host",
             chunk_entries=self.chunk_entries,
             capacity=capacity)
 
-    def _note_join(self, vj: VectorizedBoxJoin) -> None:
+    def _note_join(self, vj: VectorizedBoxJoin,
+                   kl: Optional[kernel_ledger.KernelLedger] = None) -> None:
         with self._stats_lock:
             self.stats.max_frontier = max(self.stats.max_frontier,
                                           vj.max_frontier)
-            if vj.used_kernel:
+            if vj.used_fused:
+                self.stats.n_fused_boxes += 1
+            elif vj.used_kernel:
                 self.stats.n_kernel_boxes += 1
             else:
                 self.stats.n_host_boxes += 1
+            if kl is not None and kl.invocations:
+                self.stats.device_invocations += kl.invocations
+                self.stats.device_transfer_bytes += kl.transfer_bytes
+                self.stats.max_box_device_invocations = max(
+                    self.stats.max_box_device_invocations, kl.invocations)
 
     def _work_count(self, built) -> int:
         box, bound = built
         vj = self._make_join(bound, "count", lane=self._lane.get(box))
-        out = vj.run()
-        self._note_join(vj)
+        with kernel_ledger.attach() as kl:
+            out = vj.run()
+        self._note_join(vj, kl)
         return out
 
     def _work_list(self, built,
@@ -581,16 +608,18 @@ class QueryEngine:
         triangle executor's box-granular overflow→rescan protocol)."""
         box, bound = built
         cap = capacity
-        while True:
-            vj = self._make_join(bound, "list", lane=self._lane.get(box),
-                                 capacity=cap)
-            total = vj.run()
-            if cap is None or total <= cap:
-                break
-            with self._stats_lock:
-                self.stats.n_rescans += 1
-            cap *= 2
-        self._note_join(vj)
+        with kernel_ledger.attach() as kl:
+            while True:
+                vj = self._make_join(bound, "list",
+                                     lane=self._lane.get(box),
+                                     capacity=cap)
+                total = vj.run()
+                if cap is None or total <= cap:
+                    break
+                with self._stats_lock:
+                    self.stats.n_rescans += 1
+                cap *= 2
+        self._note_join(vj, kl)
         rows = vj.bindings()
         if len(rows) == 0:
             return None

@@ -212,12 +212,22 @@ class VectorizedBoxJoin:
     innermost two-atom intersection onto ``kernels/intersect`` (Pallas on
     TPU, interpret elsewhere) instead of the host ``searchsorted`` lane.
 
+    ``device`` picks the box-level lane: ``"host"`` (this module's staged
+    per-level frontier machine) or ``"fused"``, which dispatches the
+    *whole box* to the ``kernels/lftj_fused`` megakernel — one device
+    invocation per box instead of one per frontier level. Boxes or
+    patterns outside the fused kernel's static envelope (depth bound,
+    unbound intermediate variable, VMEM budget) transparently fall back
+    to the staged path; ``used_fused`` records which lane actually ran.
+
     ``capacity`` bounds the materialized listing buffer: at most that many
     binding rows are kept (``emitted``), while ``count`` stays the *exact*
     result count — the caller detects overflow from ``count > capacity``
     and rescans at doubled capacity, exactly the triangle engine's
     overflow→rescan protocol. Emitted rows are always the deterministic
-    prefix of the full binding order, so a rescan extends, never reorders.
+    prefix of the full binding order, so a rescan extends, never reorders
+    (the fused lane has its own fixed traversal order with the same
+    prefix guarantee).
     """
 
     def __init__(self, atoms: Sequence[BoundAtom], n_vars: int,
@@ -225,15 +235,20 @@ class VectorizedBoxJoin:
                  kernel_lane: bool = False,
                  use_pallas: bool = True,
                  interpret: bool = True,
+                 device: str = "host",
                  chunk_entries: int = 4_000_000,
                  capacity: Optional[int] = None):
+        if device not in ("host", "fused"):
+            raise ValueError(f"unknown device lane {device!r}")
         self.n = n_vars
         self.mode = mode
         self.kernel_lane = kernel_lane
         self.use_pallas = use_pallas
         self.interpret = interpret
+        self.device = device
         self.chunk_entries = int(chunk_entries)
         self.capacity = None if capacity is None else int(capacity)
+        self.atoms = list(atoms)
         self.by_second: List[List[BoundAtom]] = [[] for _ in range(n_vars)]
         self.by_first: List[List[BoundAtom]] = [[] for _ in range(n_vars)]
         for a in atoms:
@@ -243,6 +258,7 @@ class VectorizedBoxJoin:
         self.emitted = 0
         self.rows_out: List[np.ndarray] = []
         self.used_kernel = False
+        self.used_fused = False
         self.max_frontier = 0
 
     # -- public --------------------------------------------------------------
@@ -250,11 +266,53 @@ class VectorizedBoxJoin:
     def run(self):
         """Returns the result count; ``rows_out`` holds the bindings
         (columns in variable order) when ``mode == 'list'``."""
+        if self.device == "fused" and self._run_fused():
+            return self.count
         cand = self._key_intersection(self.by_first[0])
         if len(cand) == 0:
             return 0
         self._eval(1, [cand])
         return self.count
+
+    def _run_fused(self) -> bool:
+        """Whole-box dispatch to the fused megakernel; False -> the box
+        is outside its envelope and the staged path should run."""
+        from repro.kernels.lftj_fused.ops import (FusedUnsupported,
+                                                  fused_count, fused_list,
+                                                  fused_supported)
+
+        dims = [(a.first_dim, a.second_dim) for a in self.atoms]
+        if fused_supported(dims, self.n) is not None:
+            return False
+        csrs = [(a.slc.keys, a.slc.off, a.slc.vals) for a in self.atoms]
+        try:
+            if self.mode == "count":
+                self.count = fused_count(dims, csrs, self.n,
+                                         interpret=self.interpret)
+            else:
+                cap = self.capacity
+                if cap is None:
+                    # unbounded listing: probe at a small cap, then rerun
+                    # sized to the exact total the probe returned
+                    total, rows = fused_list(dims, csrs, self.n,
+                                             capacity=1024,
+                                             interpret=self.interpret)
+                    if total > 1024:
+                        total, rows = fused_list(dims, csrs, self.n,
+                                                 capacity=total,
+                                                 interpret=self.interpret)
+                else:
+                    total, rows = fused_list(dims, csrs, self.n,
+                                             capacity=cap,
+                                             interpret=self.interpret)
+                self.count = total
+                self.emitted = len(rows)
+                if len(rows):
+                    self.rows_out = [rows]
+        except FusedUnsupported:
+            return False
+        self.used_fused = True
+        return True
 
     def bindings(self) -> np.ndarray:
         if not self.rows_out:

@@ -104,6 +104,24 @@ class TestIntersect:
                            for i in range(e)])
         np.testing.assert_array_equal(got, want)
 
+    def test_jit_cache_stays_bucketed(self):
+        """Pow2-bucketed pad shapes: a sweep of nearby (E, K) inputs must
+        reuse a handful of compiled signatures, not one per exact shape —
+        the unbounded-cache leak this bucketing closed."""
+        from repro.kernels.intersect.ops import jit_cache_info
+        rng = np.random.default_rng(3)
+        before = jit_cache_info()
+        for e in range(65, 97, 4):                 # all bucket to ep=128
+            for k in (129, 140, 200, 255):         # all bucket to k=256
+                a = sorted_rows(e, k, 500, rng)
+                b = sorted_rows(e, k, 500, rng)
+                got = np.asarray(intersect_count(a, b))
+                want = np.asarray([len(set(a[i][a[i] != SENTINEL]) &
+                                       set(b[i][b[i] != SENTINEL]))
+                                   for i in range(e)])
+                np.testing.assert_array_equal(got, want)
+        assert jit_cache_info() - before <= 2
+
 
 class TestEmbeddingBag:
     @pytest.mark.parametrize("mode", ["onehot", "dma"])

@@ -1,0 +1,349 @@
+"""Fused per-box LFTJ megakernel: the interpret-mode Pallas lane pinned to
+the scalar ``ref.py`` oracle, the host ``searchsorted`` frontier machine,
+and the TriangleEngine/QueryEngine end-to-end oracles.
+
+Acceptance pins (PR 7):
+
+* ``fused_count`` / ``fused_list`` match ``fused_ref`` exactly on
+  triangle / 4-clique / diamond atom shapes over random CSRs, including
+  SENTINEL-padded ragged rows, empty frontiers, and starts-only depths.
+* ``VectorizedBoxJoin(device="fused")`` matches the host lane bit-exactly
+  (counts AND canonical listings) on identical BoundAtoms, and keeps the
+  PR-6 bounded-buffer contract: exact ``count`` with a deterministic
+  emitted prefix under any capacity.
+* ``QueryEngine(backend="fused")`` matches the host backend across
+  RMAT / star / ER x triangle / 4-clique / diamond x workers {1, 4} x
+  cache on/off, boxed small so multiple boxes stream; the stats ledger
+  records one device invocation per fused box.
+* ``TriangleEngine(backend="fused")`` matches the default backend and
+  records the per-box invocation ledger in ``EngineStats``.
+* the crossover cache is keyed by (jax backend, device kind) and
+  ``REPRO_CROSSOVER_REMEASURE`` clears only the active backend's entries.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine as engine_mod
+from repro.core.engine import TriangleEngine
+from repro.data.graphs import rmat_graph
+from repro.kernels.lftj_fused.ops import (FusedUnsupported, fused_cache_info,
+                                          fused_count, fused_list,
+                                          fused_supported)
+from repro.kernels.lftj_fused.ref import SENTINEL, fused_ref
+from repro.query import QueryEngine, patterns
+from repro.query.vectorized import (BoundAtom, VectorizedBoxJoin,
+                                    build_atom_slice)
+
+WORKERS = (1, 4)
+
+# atom shapes over the variable order, as the planner emits them: every
+# pair for the cliques; the diamond's best order leaves variable 1
+# starts-only (no bound atom — the binding-independent constant-row path)
+DIMS = {
+    "triangle": ((0, 1), (0, 2), (1, 2)),
+    "four_clique": ((0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)),
+    "diamond": ((1, 2), (1, 3), (0, 2), (0, 3)),
+}
+
+
+def er_graph(n, p, seed):
+    rng = np.random.default_rng(seed)
+    adj = np.triu(rng.random((n, n)) < p, k=1)
+    src, dst = np.nonzero(adj)
+    return src.astype(np.int64), dst.astype(np.int64)
+
+
+def star_graph(hubs, leaves, seed):
+    """A few hubs adjacent to every leaf plus a sprinkle of leaf-leaf
+    edges — the skew fixture: a couple of huge rows over tiny ones."""
+    rng = np.random.default_rng(seed)
+    src = np.repeat(np.arange(hubs), leaves)
+    dst = hubs + np.tile(np.arange(leaves), hubs)
+    extra = rng.integers(hubs, hubs + leaves, size=(leaves, 2))
+    extra = extra[extra[:, 0] < extra[:, 1]]
+    src = np.concatenate([src, extra[:, 0]])
+    dst = np.concatenate([dst, extra[:, 1]])
+    uniq = np.unique(src * (hubs + leaves) + dst)
+    return (uniq // (hubs + leaves)).astype(np.int64), \
+        (uniq % (hubs + leaves)).astype(np.int64)
+
+
+GRAPHS = {
+    "er": lambda seed: er_graph(40, 0.2, seed),
+    "rmat": lambda seed: rmat_graph(64, 500, seed=seed),
+    "star": lambda seed: star_graph(3, 24, seed),
+}
+
+
+def graph_csr(src, dst):
+    """Oriented (u < v) adjacency as (keys, off, vals) compact CSR."""
+    u = np.minimum(src, dst)
+    v = np.maximum(src, dst)
+    keep = u != v
+    u, v = u[keep], v[keep]
+    order = np.lexsort((v, u))
+    u, v = u[order], v[order]
+    uniq = np.unique(u * (int(max(v.max(initial=0), 1)) + 1) + v)
+    stride = int(max(v.max(initial=0), 1)) + 1
+    u, v = uniq // stride, uniq % stride
+    keys, counts = np.unique(u, return_counts=True)
+    off = np.concatenate([np.zeros(1, np.int64),
+                          np.cumsum(counts, dtype=np.int64)])
+    return keys.astype(np.int64), off, v.astype(np.int32)
+
+
+def canonical(rows):
+    rows = np.asarray(rows, dtype=np.int64)
+    if len(rows) == 0:
+        return rows
+    order = np.lexsort(tuple(rows[:, c]
+                             for c in range(rows.shape[1] - 1, -1, -1)))
+    return rows[order]
+
+
+class TestFusedVsRef:
+    """kernels-layer pin: interpret-mode megakernel vs the scalar oracle."""
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from(sorted(DIMS)),
+           st.sampled_from(sorted(GRAPHS)))
+    def test_count_and_list_match_ref(self, seed, pattern, graph):
+        src, dst = GRAPHS[graph](seed % 997)
+        csr = graph_csr(src, dst)
+        dims = DIMS[pattern]
+        n_vars = max(sd for _, sd in dims) + 1
+        csrs = [csr] * len(dims)
+        want, want_rows = fused_ref(dims, csrs, n_vars, mode="list")
+        got = fused_count(dims, csrs, n_vars, interpret=True)
+        assert got == want
+        total, rows = fused_list(dims, csrs, n_vars,
+                                 capacity=max(1, want), interpret=True)
+        assert total == want
+        assert not len(rows) or not np.any(rows == SENTINEL)
+        assert np.array_equal(canonical(rows), canonical(want_rows))
+
+    def test_bounded_capacity_is_exact_prefix(self):
+        src, dst = er_graph(30, 0.3, 7)
+        csr = graph_csr(src, dst)
+        dims = DIMS["triangle"]
+        want, _ = fused_ref(dims, [csr] * 3, 3)
+        assert want > 4
+        total, rows = fused_list(dims, [csr] * 3, 3, capacity=2,
+                                 interpret=True)
+        assert total == want and len(rows) == 2
+        full_total, full = fused_list(dims, [csr] * 3, 3, capacity=want,
+                                      interpret=True)
+        assert full_total == want
+        # overflow rows are the deterministic prefix of the full traversal
+        assert np.array_equal(rows, full[:2])
+
+    def test_empty_graph_and_empty_frontier(self):
+        empty = (np.zeros(0, np.int64), np.zeros(1, np.int64),
+                 np.zeros(0, np.int32))
+        dims = DIMS["triangle"]
+        assert fused_count(dims, [empty] * 3, 3, interpret=True) == 0
+        total, rows = fused_list(dims, [empty] * 3, 3, capacity=4,
+                                 interpret=True)
+        assert total == 0 and len(rows) == 0
+        # disjoint key sets: depth-0 intersection is empty, no launch
+        a = graph_csr(*er_graph(20, 0.3, 1))
+        shifted = (a[0] + 1_000, a[1], a[2])
+        assert fused_count(dims, [a, shifted, a], 3, interpret=True) == 0
+
+    def test_starts_only_constant_depth(self):
+        """Diamond dims leave variable 1 unbound-by-atom: candidates are a
+        binding-independent key intersection, shipped as a constant row."""
+        csr = graph_csr(*er_graph(28, 0.25, 3))
+        dims = DIMS["diamond"]
+        want, want_rows = fused_ref(dims, [csr] * 4, 4, mode="list")
+        got = fused_count(dims, [csr] * 4, 4, interpret=True)
+        assert got == want
+        total, rows = fused_list(dims, [csr] * 4, 4,
+                                 capacity=max(1, want), interpret=True)
+        assert total == want
+        assert np.array_equal(canonical(rows), canonical(want_rows))
+
+    def test_supported_gate(self):
+        assert fused_supported(DIMS["triangle"], 3) is None
+        assert fused_supported(DIMS["diamond"], 4) is None
+        assert fused_supported((), 3) is not None          # no atoms
+        assert fused_supported(((0, 1),), 1) is not None   # one variable
+        assert fused_supported(((1, 0),), 2) is not None   # not forward
+        assert fused_supported(((0, 1),), 3) is not None   # innermost free
+        # variable 1 touches no atom at all: Cartesian expansion
+        assert fused_supported(((0, 2), (2, 3)), 4) is not None
+        deep = tuple((d, d + 1) for d in range(7))
+        assert "MAX_DEPTH" in fused_supported(deep, 8)
+        with pytest.raises(FusedUnsupported):
+            fused_count(((1, 0),), [graph_csr(*er_graph(10, 0.3, 0))], 2,
+                        interpret=True)
+
+    def test_program_cache_is_shape_bucketed(self):
+        """Boxes of nearby sizes share one compiled program (pow2-bucketed
+        pad shapes), so the jit cache stays logarithmic, not per-box."""
+        before = fused_cache_info()["count_programs"]
+        for n in (33, 35, 38, 40):
+            csr = graph_csr(*er_graph(n, 0.2, n))
+            fused_count(DIMS["triangle"], [csr] * 3, 3, interpret=True)
+        after = fused_cache_info()["count_programs"]
+        assert after - before <= 2
+
+
+def atoms_from_csr(csr, dims):
+    keys, off, vals = csr
+    indptr = np.zeros(int(keys.max(initial=-1)) + 2, np.int64)
+    indptr[keys + 1] = np.diff(off)
+    indptr = np.cumsum(indptr)
+    return [BoundAtom(fd, sd, build_atom_slice(indptr, vals, 0))
+            for fd, sd in dims]
+
+
+class TestFusedJoinLane:
+    """VectorizedBoxJoin(device='fused') vs the staged host frontier
+    machine on identical BoundAtoms."""
+
+    @pytest.mark.parametrize("pattern", sorted(DIMS))
+    def test_count_and_listing_parity(self, pattern):
+        csr = graph_csr(*er_graph(36, 0.22, 11))
+        dims = DIMS[pattern]
+        n_vars = max(sd for _, sd in dims) + 1
+        host = VectorizedBoxJoin(atoms_from_csr(csr, dims), n_vars,
+                                 mode="list", device="host")
+        fused = VectorizedBoxJoin(atoms_from_csr(csr, dims), n_vars,
+                                  mode="list", device="fused")
+        assert host.run() == fused.run()
+        assert fused.used_fused and not host.used_fused
+        assert np.array_equal(canonical(host.bindings()),
+                              canonical(fused.bindings()))
+
+    def test_overflow_keeps_exact_count(self):
+        """PR-6 bounded-buffer contract through the fused lane: ``count``
+        stays exact past capacity and the emitted rows are a prefix."""
+        csr = graph_csr(*er_graph(32, 0.3, 5))
+        dims = DIMS["triangle"]
+        full = VectorizedBoxJoin(atoms_from_csr(csr, dims), 3,
+                                 mode="list", device="fused")
+        want = full.run()
+        assert want > 1
+        vj = VectorizedBoxJoin(atoms_from_csr(csr, dims), 3, mode="list",
+                               device="fused", capacity=1)
+        assert vj.run() == want          # exact despite the tiny buffer
+        assert vj.emitted <= 1
+        assert np.array_equal(vj.bindings(), full.bindings()[:vj.emitted])
+
+    def test_unsupported_pattern_falls_back_to_staged(self):
+        """path3 under its natural order binds nothing at the innermost
+        depth only when dims skip variables — fabricate one: the fused
+        gate rejects, the staged lane still answers."""
+        csr = graph_csr(*er_graph(24, 0.25, 2))
+        dims = ((0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6))
+        n_vars = 7                       # deeper than MAX_DEPTH=6
+        host = VectorizedBoxJoin(atoms_from_csr(csr, dims), n_vars,
+                                 device="host")
+        fused = VectorizedBoxJoin(atoms_from_csr(csr, dims), n_vars,
+                                  device="fused")
+        assert host.run() == fused.run()
+        assert not fused.used_fused
+
+
+class TestQueryEngineFused:
+    """End-to-end: backend='fused' pinned to the host backend, boxed."""
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from(sorted(GRAPHS)),
+           st.sampled_from(["triangle", "four_clique", "diamond"]),
+           st.sampled_from(WORKERS), st.sampled_from([0, 256]))
+    def test_counts_and_listings_match_host(self, seed, graph, pattern,
+                                            workers, cache_words):
+        src, dst = GRAPHS[graph](seed % 997)
+        q = patterns.PATTERNS[pattern]()
+        host = QueryEngine.from_graph(q, src, dst, mem_words=300,
+                                      workers=workers,
+                                      cache_words=cache_words,
+                                      backend="host")
+        fused = QueryEngine.from_graph(q, src, dst, mem_words=300,
+                                       workers=workers,
+                                       cache_words=cache_words,
+                                       backend="fused")
+        assert host.count() == fused.count()
+        assert np.array_equal(canonical(host.list()),
+                              canonical(fused.list()))
+        s = fused.stats
+        assert s.n_fused_boxes > 0
+        assert s.device_invocations >= s.n_fused_boxes
+        assert s.device_transfer_bytes > 0
+        assert s.max_box_device_invocations >= 1
+
+    def test_rescan_counter_on_overflow(self):
+        src, dst = er_graph(48, 0.25, 13)
+        qe = QueryEngine.from_graph(patterns.triangle(), src, dst,
+                                    mem_words=300, backend="fused")
+        rows = qe.list(capacity=1)
+        host = QueryEngine.from_graph(patterns.triangle(), src, dst,
+                                      mem_words=300, backend="host")
+        assert np.array_equal(canonical(rows), canonical(host.list()))
+        assert qe.stats.n_rescans >= 1
+
+
+class TestTriangleEngineFused:
+    @pytest.mark.parametrize("workers", WORKERS)
+    def test_count_matches_auto(self, workers):
+        src, dst = rmat_graph(128, 1200, seed=17)
+        want = TriangleEngine(src, dst).count()
+        eng = TriangleEngine(src, dst, mem_words=1000, workers=workers,
+                             backend="fused")
+        assert eng.count() == want
+        s = eng.stats
+        assert s.n_fused_boxes > 0
+        assert s.device_invocations >= s.n_fused_boxes
+        assert s.max_box_device_invocations >= 1
+        assert s.device_transfer_bytes > 0
+
+    def test_star_graph_hub_box(self):
+        src, dst = star_graph(4, 60, 3)
+        want = TriangleEngine(src, dst).count()
+        eng = TriangleEngine(src, dst, mem_words=800, backend="fused")
+        assert eng.count() == want
+        assert eng.stats.n_fused_boxes > 0
+
+
+class TestCrossoverCache:
+    """Backend-keyed crossover persistence + selective REMEASURE."""
+
+    def _reset(self, monkeypatch, tmp_path):
+        monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+        monkeypatch.setattr(engine_mod, "_crossover_memo", {})
+        monkeypatch.setattr(engine_mod, "_remeasure_handled", False)
+
+    def test_keys_are_backend_prefixed(self, monkeypatch, tmp_path):
+        self._reset(monkeypatch, tmp_path)
+        got = engine_mod._cached_crossover(":unit", 7, lambda: 0.25)
+        assert got == 0.25
+        data = json.load(open(os.path.join(tmp_path, "crossover.json")))
+        key = f"{engine_mod._active_prefix()}:nv7:unit"
+        assert data[key] == 0.25
+        # second call is memo/file served, never remeasured
+        assert engine_mod._cached_crossover(
+            ":unit", 7, lambda: (_ for _ in ()).throw(AssertionError)) == 0.25
+
+    def test_remeasure_clears_only_active_backend(self, monkeypatch,
+                                                  tmp_path):
+        self._reset(monkeypatch, tmp_path)
+        active = f"{engine_mod._active_prefix()}:nv7:unit"
+        other = "tpu:TPU v4:nv256"
+        engine_mod._crossover_store({active: 0.5, other: 0.125})
+        monkeypatch.setenv("REPRO_CROSSOVER_REMEASURE", "1")
+        got = engine_mod._cached_crossover(":unit", 7, lambda: 0.75)
+        assert got == 0.75               # active entry was dropped
+        data = json.load(open(os.path.join(tmp_path, "crossover.json")))
+        assert data[other] == 0.125      # foreign backend survives
+        assert data[active] == 0.75
+        # the clear happens once per process: a second call re-reads
+        monkeypatch.setattr(engine_mod, "_crossover_memo", {})
+        assert engine_mod._cached_crossover(
+            ":unit", 7, lambda: (_ for _ in ()).throw(AssertionError)) == 0.75
