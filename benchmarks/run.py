@@ -10,6 +10,7 @@
   skew   heavy/light vs uniform planner A/B    (benchmarks.skew_scaling)
   kernels Pallas kernels vs references          (benchmarks.kernel_bench)
   roofline per-cell roofline terms from dry-run (benchmarks.roofline)
+  serve   concurrent serving latency + envelope (benchmarks.serve_load)
 
 Prints ``name,us_per_call,derived`` CSV. ``--fast`` shrinks sizes;
 ``--only fig9`` runs a single suite; ``--smoke`` is the CI gate — the
@@ -34,7 +35,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke pass: fig9 + fig11 + ooc + query + skew "
-                         "at --fast sizes")
+                         "+ serve at --fast sizes")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write emitted rows as a JSON run record")
     args = ap.parse_args()
@@ -43,7 +44,7 @@ def main() -> None:
 
     from . import (arboricity_scaling, boxing_overhead, kernel_bench,
                    lftj_vs_mgt, outofcore, parallel_scaling, query_patterns,
-                   roofline, skew_scaling, vanilla_vs_boxed)
+                   roofline, serve_load, skew_scaling, vanilla_vs_boxed)
     from .common import collected_rows, reset_rows
 
     suites = {
@@ -57,11 +58,12 @@ def main() -> None:
         "skew": skew_scaling.main,
         "kernels": kernel_bench.main,
         "roofline": roofline.main,
+        "serve": serve_load.main,
     }
     if args.only:
         names = [args.only]
     elif args.smoke:
-        names = ["fig9", "fig11", "ooc", "query", "skew"]
+        names = ["fig9", "fig11", "ooc", "query", "skew", "serve"]
     else:
         names = list(suites)
     reset_rows()

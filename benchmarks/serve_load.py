@@ -1,0 +1,205 @@
+"""Serving-layer load benchmark: latency/throughput under concurrency.
+
+N client threads fire mixed triangle / 4-clique / path traffic at one
+``repro.serve.Server`` holding a fixed TOTAL ``mem_words`` — the scenario
+the admission controller exists for. Measures per-query latency
+percentiles (p50/p90/p99) and aggregate throughput, and enforces the two
+serving-layer acceptance gates:
+
+* **exactness** — every served result is byte-identical to a serial
+  one-query-at-a-time run of the same query at the same admitted budget
+  (counts equal; listings equal row for row in plan order);
+* **I/O envelope** — the server's aggregate measured ``block_reads``
+  stays within ``ENVELOPE_FACTOR`` (2x) of the SUM of per-query solo
+  envelopes at the partitioned budgets ``m_i`` — i.e. concurrency +
+  sharing never costs more than running the queries alone in their
+  partitions, up to a constant (usually it costs *less*: the shared
+  cache turns overlapping traffic into hits).
+
+CI runs ``python -m benchmarks.serve_load --smoke --json serve-load.json``
+(4 concurrent mixed queries at fast sizes) and uploads the record.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from .common import emit
+
+ENVELOPE_FACTOR = 2.0
+
+MIX = [("triangle", "count"), ("four_clique", "count"),
+       ("path3", "count"), ("triangle", "list")]
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+def _serial_oracle(graph, name: str, mode: str, m_words: int,
+                   cache: Dict[tuple, object]):
+    """Serial per-query reference at budget ``m_words`` (memoized: the
+    exactness gate replays it per admitted-budget value)."""
+    from repro.query import QueryEngine
+    from repro.query.patterns import PATTERNS
+    key = (name, mode, m_words)
+    if key not in cache:
+        src, dst = graph
+        eng = QueryEngine.from_graph(PATTERNS[name](), src, dst,
+                                     mem_words=m_words,
+                                     use_pallas_kernels=False)
+        cache[key] = eng.count() if mode == "count" else eng.list()
+    return cache[key]
+
+
+def run_load(graph, *, mem_words: int, n_clients: int,
+             queries_per_client: int, workers_per_query: int = 1,
+             label: str = "serve") -> Dict[str, object]:
+    from repro.serve import Server
+
+    src, dst = graph
+    srv = Server.from_graph(src, dst, mem_words=mem_words,
+                            max_active=n_clients,
+                            queue_depth=4 * n_clients,
+                            workers_per_query=workers_per_query,
+                            use_pallas_kernels=False)
+    records: List[dict] = []
+    errors: List[BaseException] = []
+    rec_lock = threading.Lock()
+    start_gate = threading.Event()
+
+    def client(cid: int) -> None:
+        try:
+            start_gate.wait()
+            for k in range(queries_per_client):
+                name, mode = MIX[(cid + k) % len(MIX)]
+                t0 = time.perf_counter()
+                h = srv.submit(name, mode, timeout=600)
+                result = h.result(timeout=600)
+                lat = time.perf_counter() - t0
+                with rec_lock:
+                    records.append({
+                        "client": cid, "name": name, "mode": mode,
+                        "latency_s": lat, "m_words": h.admitted_words,
+                        "block_reads": h.stats.block_reads,
+                        "cache_hits": h.stats.cache_hits,
+                        "result": result})
+        except BaseException as e:              # noqa: BLE001 — reported
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(n_clients)]
+    for t in threads:
+        t.start()
+    t_start = time.perf_counter()
+    start_gate.set()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t_start
+    if errors:
+        raise errors[0]
+
+    # -- gate 1: byte-identical to serial per-query runs ------------------
+    oracle_cache: Dict[tuple, object] = {}
+    for r in records:
+        want = _serial_oracle(graph, r["name"], r["mode"], r["m_words"],
+                              oracle_cache)
+        if r["mode"] == "count":
+            assert r["result"] == want, \
+                (r["name"], r["m_words"], r["result"], want)
+        else:
+            got = np.asarray(r["result"])
+            assert got.shape == want.shape \
+                and got.tobytes() == want.tobytes(), \
+                (r["name"], r["m_words"], got.shape, want.shape)
+
+    # -- gate 2: aggregate I/O within 2x the summed solo envelopes --------
+    solo_cache: Dict[tuple, int] = {}
+    solo_sum = 0
+    for r in records:
+        key = (r["name"], r["mode"], r["m_words"])
+        if key not in solo_cache:
+            _, stats = srv.solo_run(r["name"], r["mode"],
+                                    words=r["m_words"])
+            solo_cache[key] = stats.block_reads
+        solo_sum += solo_cache[key]
+    aggregate = srv.device.stats.block_reads
+    assert aggregate <= ENVELOPE_FACTOR * max(1, solo_sum), \
+        f"aggregate block_reads {aggregate} > " \
+        f"{ENVELOPE_FACTOR}x solo sum {solo_sum}"
+
+    lats = [r["latency_s"] for r in records]
+    out = {
+        "label": label,
+        "n_clients": n_clients,
+        "queries": len(records),
+        "mem_words": mem_words,
+        "workers_per_query": workers_per_query,
+        "wall_s": round(wall, 4),
+        "throughput_qps": round(len(records) / wall, 2) if wall else 0.0,
+        "p50_ms": round(1e3 * _pct(lats, 50), 3),
+        "p90_ms": round(1e3 * _pct(lats, 90), 3),
+        "p99_ms": round(1e3 * _pct(lats, 99), 3),
+        "aggregate_block_reads": int(aggregate),
+        "solo_envelope_sum": int(solo_sum),
+        "envelope_ratio": round(aggregate / max(1, solo_sum), 3),
+        "plan_hits": srv.plan_hits,
+        "plan_misses": srv.plan_misses,
+        "peak_reserved_words": srv.admission.peak_reserved,
+        "n_queued": srv.admission.n_queued,
+    }
+    srv.close()
+    assert out["peak_reserved_words"] <= mem_words
+    emit(f"{label}/p50_latency", 1e6 * _pct(lats, 50),
+         f"p90_ms={out['p90_ms']} p99_ms={out['p99_ms']} "
+         f"qps={out['throughput_qps']}")
+    emit(f"{label}/io_envelope", 1e6 * wall,
+         f"aggregate={aggregate} solo_sum={solo_sum} "
+         f"ratio={out['envelope_ratio']}<= {ENVELOPE_FACTOR}")
+    return out
+
+
+def main(fast: bool = False, smoke: bool = False,
+         json_path: str | None = None) -> None:
+    from repro.data.graphs import rmat_graph
+
+    results = []
+    if smoke or fast:
+        # the CI gate: 4 concurrent mixed queries against one partitioned
+        # budget, exactness + 2x-envelope asserted inside run_load
+        graph = rmat_graph(512, 6000, seed=21)
+        results.append(run_load(graph, mem_words=1 << 15, n_clients=4,
+                                queries_per_client=2,
+                                label="serve_smoke"))
+    else:
+        graph = rmat_graph(1024, 20000, seed=21)
+        for n_clients in (2, 4, 8):
+            results.append(run_load(
+                graph, mem_words=1 << 17, n_clients=n_clients,
+                queries_per_client=3,
+                label=f"serve_c{n_clients}"))
+        results.append(run_load(
+            graph, mem_words=1 << 17, n_clients=4, queries_per_client=3,
+            workers_per_query=2, label="serve_c4_w2"))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"runs": results}, f, indent=2)
+        print(f"# wrote {json_path} ({len(results)} runs)", flush=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="the CI gate: 4 concurrent mixed queries, "
+                         "exactness + 2x I/O envelope asserted")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    a = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(fast=a.fast, smoke=a.smoke, json_path=a.json)

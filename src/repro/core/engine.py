@@ -181,6 +181,46 @@ def _crossover_cache_file() -> str:
     return os.path.join(base, "crossover.json")
 
 
+class _crossover_file_lock:
+    """Inter-process lock for the crossover cache's read-modify-write.
+
+    The JSON store itself is written atomically (tmp + ``os.replace``), but
+    two processes remeasuring concurrently still race load→merge→store and
+    the slower one clobbers the faster one's entries (lost update — exactly
+    what happens when pytest workers calibrate side by side under one
+    ``REPRO_CACHE_DIR``). An ``flock`` on a sibling ``.lock`` file
+    serializes the whole read-modify-write; platforms without ``fcntl``
+    (or unwritable cache dirs) degrade to the old lock-free behaviour
+    rather than failing execution."""
+
+    def __init__(self):
+        self._f = None
+
+    def __enter__(self):
+        try:
+            import fcntl
+            path = _crossover_cache_file() + ".lock"
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            self._f = open(path, "a+")
+            fcntl.flock(self._f.fileno(), fcntl.LOCK_EX)
+        except (ImportError, OSError):
+            if self._f is not None:
+                self._f.close()
+                self._f = None
+        return self
+
+    def __exit__(self, *exc):
+        if self._f is not None:
+            try:
+                import fcntl
+                fcntl.flock(self._f.fileno(), fcntl.LOCK_UN)
+            except (ImportError, OSError):
+                pass
+            self._f.close()
+            self._f = None
+        return False
+
+
 def _crossover_load() -> dict:
     try:
         with open(_crossover_cache_file()) as f:
@@ -226,10 +266,11 @@ def _maybe_clear_remeasure() -> None:
     if os.environ.get("REPRO_CROSSOVER_REMEASURE", "") in ("", "0"):
         return
     prefix = _active_prefix() + ":"
-    data = _crossover_load()
-    kept = {k: v for k, v in data.items() if not k.startswith(prefix)}
-    if len(kept) != len(data):
-        _crossover_store(kept)
+    with _crossover_file_lock():
+        data = _crossover_load()
+        kept = {k: v for k, v in data.items() if not k.startswith(prefix)}
+        if len(kept) != len(data):
+            _crossover_store(kept)
     for k in list(_crossover_memo):
         if k.startswith(prefix):
             del _crossover_memo[k]
@@ -249,9 +290,13 @@ def _cached_crossover(suffix: str, nv: int, measure) -> float:
         return float(cached)
     value = measure()
     _crossover_memo[key] = value
-    data = _crossover_load()
-    data[key] = value
-    _crossover_store(data)
+    # merge-under-lock: re-load inside the file lock so a concurrent
+    # process's freshly-persisted keys survive this store (the two-process
+    # remeasure race regression-tested in tests/test_crossover_cache.py)
+    with _crossover_file_lock():
+        data = _crossover_load()
+        data[key] = value
+        _crossover_store(data)
     return value
 
 

@@ -70,6 +70,13 @@ from .lftj_jax import (SENTINEL, _count_chunked, _count_rows_chunked,
 _ROW_BUCKET = 64
 
 
+class BoxQueueCancelled(RuntimeError):
+    """Raised by ``run_box_queue`` when its ``cancel`` event fires before
+    the queue drains: remaining boxes are abandoned, in-progress stages
+    finish, every worker is joined. Boxes are idempotent, so a cancelled
+    queue can simply be re-run (the serving layer's cancellation path)."""
+
+
 def _pow2(n: int, lo: int = 1) -> int:
     return max(lo, 1 << int(np.ceil(np.log2(max(1, n)))))
 
@@ -236,6 +243,17 @@ class SliceCache:
         self.passthrough_words += len(vals)
         return ip, vals
 
+    def _hit(self, bid: int, ent) -> None:
+        """Bookkeeping hook for one block served from cache (subclasses —
+        the serving layer's multi-tenant cache — attribute per tenant)."""
+        self.hits += 1
+        self.hit_words += len(ent[1])
+
+    def _miss(self, n_blocks: int, n_words: int) -> None:
+        """Bookkeeping hook for a missing-block run read from the source."""
+        self.misses += n_blocks
+        self.miss_words += n_words
+
     def _fetch_run(self, b0: int, b1: int) -> list:
         """One sequential source read covering missing blocks b0..b1, split
         into per-block cache entries. Returns the entries in block order
@@ -243,8 +261,7 @@ class SliceCache:
         eviction inside this very request never forces a re-read)."""
         br = self.block_rows
         ip, vals = self.source.read_rows(b0 * br, b1 * br + br - 1)
-        self.misses += b1 - b0 + 1
-        self.miss_words += len(vals)
+        self._miss(b1 - b0 + 1, len(vals))
         entries = []
         for bid in range(b0, b1 + 1):
             r0 = (bid - b0) * br
@@ -281,8 +298,7 @@ class SliceCache:
             ent = self._blocks.get(bid)
             if ent is not None:
                 self._blocks.move_to_end(bid)
-                self.hits += 1
-                self.hit_words += len(ent[1])
+                self._hit(bid, ent)
                 if dev is not None:
                     dev.serve_from_cache(len(ent[1]))
                 parts.append(ent)
@@ -334,7 +350,8 @@ def run_box_queue(items: List, *, order: List[int],
                   work: Callable[[object], object],
                   workers: int,
                   inflight_items: int,
-                  inflight_words: Optional[int] = None):
+                  inflight_words: Optional[int] = None,
+                  cancel: Optional[threading.Event] = None):
     """Drain a box work queue on a bounded worker pool (the PR-4 scheduler).
 
     This is the shared queue machinery of every boxed executor in the repo
@@ -358,7 +375,10 @@ def run_box_queue(items: List, *, order: List[int],
     corrects to the fetch's actual words once known; an item wider than the
     whole window is admitted alone (pinned-spill rule) so the queue cannot
     deadlock on it. A stage exception cancels the remaining queue, every
-    worker is joined, and the first error re-raises here.
+    worker is joined, and the first error re-raises here. An optional
+    ``cancel`` event aborts the same way from outside: no new item is
+    claimed once it is set, in-progress stages finish, workers join, and
+    ``BoxQueueCancelled`` raises (unless a stage error got there first).
 
     Returns ``(results, telemetry)``: per-item results in *item order*
     (``None`` for skipped items) for deterministic reduction, plus the
@@ -397,6 +417,9 @@ def run_box_queue(items: List, *, order: List[int],
             t0 = time.perf_counter()
             with cond:
                 while True:
+                    if cancel is not None and cancel.is_set():
+                        state["stop"] = True
+                        cond.notify_all()
                     if state["stop"] or state["next"] >= n:
                         tele["wait"] += time.perf_counter() - t0
                         return
@@ -411,7 +434,9 @@ def run_box_queue(items: List, *, order: List[int],
                         # would deadlock on it
                         if fits or state["res_boxes"] == 0:
                             break
-                    cond.wait()
+                    # poll so an externally-set cancel event is noticed even
+                    # when no stage completion notifies the condition
+                    cond.wait(timeout=0.05 if cancel is not None else None)
                 bi = order[state["next"]]
                 state["next"] += 1
                 state["building"] = True
@@ -468,6 +493,8 @@ def run_box_queue(items: List, *, order: List[int],
     tele["pool"] = len(threads)
     if state["err"] is not None:
         raise state["err"]
+    if cancel is not None and cancel.is_set():
+        raise BoxQueueCancelled("box queue cancelled before draining")
     return results, tele
 
 

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import threading
 from collections import OrderedDict
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -57,7 +58,20 @@ class IOStats:
 
 
 class BlockDevice:
-    """Virtual block device + LRU buffer cache, counting block I/Os."""
+    """Virtual block device + LRU buffer cache, counting block I/Os.
+
+    **Tagged attribution (the serving layer's partitioned-memory model).**
+    ``open_tag(tag, cache_blocks=k)`` creates a *partition*: its own
+    ``k``-frame LRU and its own ``IOStats``. While a thread runs inside
+    ``with device.attributed(tag):`` every access it issues consults the
+    tag's private frames (not the shared ones) and is charged to *both*
+    the tag's stats and the global ``stats`` — so N concurrent queries
+    each see exactly the frame behaviour of a solo run with ``m_i/B``
+    frames (Pagh & Silvestri's bound applied per partition of M), while
+    the global ledger stays the plain sum over partitions. Attribution is
+    thread-local: each query's worker threads tag their own reads against
+    one shared device without interfering.
+    """
 
     def __init__(self, block_words: int = 4096, cache_blocks: int = 1024):
         self.B = int(block_words)
@@ -66,9 +80,53 @@ class BlockDevice:
         self._next_word = 0
         self._cache: OrderedDict = OrderedDict()  # block id -> True
         self.stats = IOStats()
+        # per-tag partitions: tag -> (frame OrderedDict, frame budget, stats)
+        self._tags: dict = {}
+        self._tls = threading.local()
         # all accounting serializes here: concurrent slice builders and
         # listing writers share one device ledger (see module docstring)
         self._lock = threading.Lock()
+
+    # -- tagged attribution --------------------------------------------------
+
+    def open_tag(self, tag, cache_blocks: int) -> None:
+        """Create (or resize) the ``tag`` partition: a private LRU of
+        ``cache_blocks`` frames plus a private ``IOStats`` ledger."""
+        with self._lock:
+            if tag in self._tags:
+                frames, _, stats = self._tags[tag]
+                self._tags[tag] = (frames, max(1, int(cache_blocks)), stats)
+            else:
+                self._tags[tag] = (OrderedDict(), max(1, int(cache_blocks)),
+                                   IOStats())
+
+    def close_tag(self, tag) -> IOStats:
+        """Drop the partition's frames; its final stats are returned (and
+        remain readable via ``tag_stats`` until the tag is reopened)."""
+        with self._lock:
+            frames, budget, stats = self._tags.get(
+                tag, (OrderedDict(), 1, IOStats()))
+            self._tags[tag] = (OrderedDict(), 0, stats)
+            return stats
+
+    def tag_stats(self, tag) -> IOStats:
+        with self._lock:
+            if tag not in self._tags:
+                self._tags[tag] = (OrderedDict(), 1, IOStats())
+            return self._tags[tag][2]
+
+    @contextmanager
+    def attributed(self, tag):
+        """Attribute this thread's accesses to ``tag`` (nestable; restores
+        the previous tag on exit). The tag must have been ``open_tag``-ed
+        for its partition frames to apply; an unknown tag only accumulates
+        stats."""
+        prev = getattr(self._tls, "tag", None)
+        self._tls.tag = tag
+        try:
+            yield
+        finally:
+            self._tls.tag = prev
 
     # -- registration -------------------------------------------------------
 
@@ -98,7 +156,30 @@ class BlockDevice:
 
     # -- accounting ---------------------------------------------------------
 
+    def _tag_entry(self):
+        """(frames, budget, stats) of this thread's active tag partition,
+        or ``None`` when untagged / the tag has no partition."""
+        tag = getattr(self._tls, "tag", None)
+        if tag is None:
+            return None
+        ent = self._tags.get(tag)
+        if ent is None or ent[1] <= 0:
+            return None
+        return ent
+
     def _touch_block(self, blk: int) -> None:
+        ent = self._tag_entry()
+        if ent is not None:
+            frames, budget, stats = ent
+            if blk in frames:
+                frames.move_to_end(blk)
+                return
+            stats.block_reads += 1
+            self.stats.block_reads += 1
+            frames[blk] = True
+            if len(frames) > budget:
+                frames.popitem(last=False)
+            return
         cache = self._cache
         if blk in cache:
             cache.move_to_end(blk)
@@ -108,10 +189,16 @@ class BlockDevice:
         if len(cache) > self.cache_blocks:
             cache.popitem(last=False)
 
+    def _tag_words(self, n: int) -> None:
+        ent = self._tag_entry()
+        if ent is not None:
+            ent[2].word_reads += n
+
     def touch(self, arr: np.ndarray, i: int) -> None:
         """Random access to element i of a registered (view of an) array."""
         with self._lock:
             self.stats.word_reads += 1
+            self._tag_words(1)
             self._touch_block(self._word_addr(arr, i) // self.B)
 
     def read_range(self, arr: np.ndarray, lo: int, hi: int) -> None:
@@ -124,17 +211,25 @@ class BlockDevice:
             for blk in range(a, b + 1):
                 self._touch_block(blk)
             self.stats.word_reads += hi - lo
+            self._tag_words(hi - lo)
 
     def write_words(self, n_words: int) -> None:
         """Append-only output stream (counts ceil(n/B) over time)."""
+        blocks = (n_words + self.B - 1) // self.B
         with self._lock:
-            self.stats.block_writes += (n_words + self.B - 1) // self.B
+            self.stats.block_writes += blocks
+            ent = self._tag_entry()
+            if ent is not None:
+                ent[2].block_writes += blocks
 
     def serve_from_cache(self, n_words: int) -> None:
         """Record ``n_words`` served by a cache layer above the device —
         traffic that would have been ``read_range`` calls without it."""
         with self._lock:
             self.stats.cache_served_words += n_words
+            ent = self._tag_entry()
+            if ent is not None:
+                ent[2].cache_served_words += n_words
 
     def clear_cache(self) -> None:
         with self._lock:

@@ -240,6 +240,13 @@ class QueryEngine:
         ``QueryStats``.
     heavy_threshold : hub degree cut for ``skew='heavy_light'``; default
         √(2·Σdeg)-style per owned dimension.
+    plan : a previously computed ``QueryPlan`` for this (query, sources,
+        mem_words, skew) — skips re-planning (the serving layer's
+        per-pattern-shape plan cache).
+    cancel : optional ``threading.Event``; once set, no further box is
+        claimed, in-progress boxes finish, and the run raises
+        ``core.executor.BoxQueueCancelled`` (boxes are idempotent, so a
+        cancelled query can simply be resubmitted).
     """
 
     def __init__(self, query: Query, *,
@@ -258,6 +265,8 @@ class QueryEngine:
                  chunk_entries: int = 4_000_000,
                  skew: str = "uniform",
                  heavy_threshold: Optional[int] = None,
+                 plan: Optional[QueryPlan] = None,
+                 cancel: Optional[threading.Event] = None,
                  use_pallas_kernels: Optional[bool] = None):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
@@ -387,7 +396,13 @@ class QueryEngine:
             self._sources[key] = src
         self._nv_all = max((s.n_nodes for s in self._sources.values()),
                            default=0)
-        self._plan_cache: Optional[Tuple[Optional[int], QueryPlan]] = None
+        # plan injection (the serving layer's per-pattern-shape plan cache
+        # hands a previously-computed plan straight in; planning inputs —
+        # degree indexes, budget, skew — must match, which the cache key
+        # guarantees)
+        self._plan_cache: Optional[Tuple[Optional[int], QueryPlan]] = \
+            (mem_words, plan) if plan is not None else None
+        self.cancel = cancel
         self._stats_lock = threading.Lock()
         self.stats = QueryStats(order=self.order)
 
@@ -667,6 +682,53 @@ class QueryEngine:
         return box_queue_order([self._est_box_words(b) for b in boxes],
                                ledger_sensitive=ledger)
 
+    # -- serving-layer hooks ----------------------------------------------------
+    # ``repro.serve`` drives the engine's per-box stages through its own
+    # run_box_queue round (wrapping them with fault capture, I/O
+    # attribution and result streaming); these public accessors are that
+    # contract — the stages themselves stay the single implementation.
+
+    def queue_order(self, boxes) -> List[int]:
+        """Queue drain order for ``boxes`` (``sharding.box_queue_order``
+        policy: plan order whenever an I/O ledger is attached)."""
+        return self._queue_order(boxes)
+
+    def box_stages(self, mode: str, capacity: Optional[int] = None):
+        """``(est_words, fetch, build, work)`` stage callables for
+        ``run_box_queue`` — ``mode`` 'count' or 'list'; ``capacity`` is
+        the bounded-listing per-box buffer (None = unbounded)."""
+        if mode == "count":
+            work = self._work_count
+        elif mode == "list":
+            work = lambda built: self._work_list(built, capacity)  # noqa: E731
+        else:
+            raise ValueError(f"mode {mode!r} not in ('count', 'list')")
+        return self._est_box_words, self._fetch_box, self._build_box, work
+
+    def default_list_capacity(self) -> Optional[int]:
+        """The bounded-buffer per-box listing capacity ``list()`` derives
+        from the memory budget (the output buffer is part of the §5
+        working set); ``None`` when no budget is set."""
+        if self.mem_words is None:
+            return None
+        return _pow2(max(256, self.mem_words // max(1, self.n)))
+
+    def head_columns(self, rows: np.ndarray) -> np.ndarray:
+        """Project raw binding rows (variable-order columns) to the
+        query's head order — the last step of ``list()``."""
+        head_cols = [self.order.index(h) for h in self.query.head]
+        return rows[:, head_cols]
+
+    def io_mark(self):
+        """Snapshot of the device + cache counters (pair with
+        ``io_collect``). Only meaningful when this engine is the device's
+        sole client in the window; the serving layer uses per-query
+        attribution tags (``BlockDevice.attributed``) instead."""
+        return self._io_mark()
+
+    def io_collect(self, mark) -> None:
+        self._io_collect(mark)
+
     def _run(self, boxes, work) -> List:
         """Per-box results in plan order — serial Prefetcher pipeline for
         ``workers=1`` (the oracle), the shared pool otherwise."""
@@ -681,7 +743,8 @@ class QueryEngine:
                 work=work,
                 workers=self.workers,
                 inflight_items=self.inflight_boxes,
-                inflight_words=inflight_words)
+                inflight_words=inflight_words,
+                cancel=self.cancel)
             merge_queue_telemetry(self.stats, tele, self._stats_lock,
                                   inflight_boxes=self.inflight_boxes)
             return results
@@ -691,6 +754,10 @@ class QueryEngine:
             depth=self.prefetch_depth)
         try:
             for i, built in enumerate(pf):
+                if self.cancel is not None and self.cancel.is_set():
+                    from repro.core.executor import BoxQueueCancelled
+                    raise BoxQueueCancelled(
+                        "query cancelled before draining its boxes")
                 if built is None:
                     continue
                 results[i] = work(built)
@@ -722,9 +789,8 @@ class QueryEngine:
         while peak result memory respects the budget."""
         plan = self.plan()
         self._reset_stats(plan)
-        cap0 = capacity
-        if cap0 is None and self.mem_words is not None:
-            cap0 = _pow2(max(256, self.mem_words // max(1, self.n)))
+        cap0 = capacity if capacity is not None \
+            else self.default_list_capacity()
         mark = self._io_mark()
         results = self._run(plan.boxes,
                             lambda built: self._work_list(built, cap0))
@@ -733,8 +799,7 @@ class QueryEngine:
         rows = np.concatenate(parts) if parts \
             else np.zeros((0, self.n), dtype=np.int64)
         self.stats.n_results = len(rows)
-        head_cols = [self.order.index(h) for h in self.query.head]
-        return rows[:, head_cols]
+        return self.head_columns(rows)
 
 
 def query_count(query: Query, src, dst, **kw) -> int:

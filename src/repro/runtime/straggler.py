@@ -16,6 +16,7 @@ Two mechanisms (DESIGN.md §5):
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -55,7 +56,14 @@ class BoxTask:
 
 
 class BoxScheduler:
-    """Work-stealing scheduler over idempotent boxes."""
+    """Work-stealing scheduler over idempotent boxes.
+
+    Thread-safe: the serving layer (``repro.serve``) drives one scheduler
+    per query from several box-pool worker threads — completion dedup and
+    re-queuing serialize on an internal lock, so a box that a retry round
+    and a straggler duplicate both finish is counted exactly once
+    (``complete`` returns whether this completion was the effective one,
+    ``duplicates``/``requeues`` tally the rest)."""
 
     def __init__(self, boxes: Sequence, n_workers: int,
                  steal_after_s: float = 60.0):
@@ -65,58 +73,87 @@ class BoxScheduler:
         self.steal_after_s = steal_after_s
         self.inflight: Dict[int, Set[int]] = {w: set() for w in range(n_workers)}
         self.duplicates = 0
+        self.requeues = 0
+        self._lock = threading.RLock()
 
     def next_for(self, worker: int, now: Optional[float] = None) -> Optional[BoxTask]:
         now = time.monotonic() if now is None else now
-        while self.queue:
-            tid = self.queue.popleft()
-            t = self.tasks[tid]
-            if t.done:
-                continue
-            t.assigned_to = worker
-            t.t_assigned = now
-            self.inflight[worker].add(tid)
-            return t
-        # steal the longest-outstanding task from another worker
-        victim = None
-        for w, tids in self.inflight.items():
-            if w == worker:
-                continue
-            for tid in tids:
+        with self._lock:
+            while self.queue:
+                tid = self.queue.popleft()
                 t = self.tasks[tid]
-                if t.done or now - t.t_assigned < self.steal_after_s:
+                if t.done:
                     continue
-                if victim is None or t.t_assigned < victim.t_assigned:
-                    victim = t
-        if victim is not None:
-            self.duplicates += 1
-            self.inflight[worker].add(victim.box_id)
-            return victim
-        return None
+                t.assigned_to = worker
+                t.t_assigned = now
+                self.inflight[worker].add(tid)
+                return t
+            # steal the longest-outstanding task from another worker
+            victim = None
+            for w, tids in self.inflight.items():
+                if w == worker:
+                    continue
+                for tid in tids:
+                    t = self.tasks[tid]
+                    if t.done or now - t.t_assigned < self.steal_after_s:
+                        continue
+                    if victim is None or t.t_assigned < victim.t_assigned:
+                        victim = t
+            if victim is not None:
+                self.duplicates += 1
+                self.inflight[worker].add(victim.box_id)
+                return victim
+            return None
 
     def complete(self, worker: int, box_id: int, result) -> bool:
         """Idempotent completion: the first result wins; returns whether
         this completion was the effective one."""
-        t = self.tasks[box_id]
-        self.inflight[worker].discard(box_id)
-        if t.done:
-            return False
-        t.done = True
-        t.result = result
-        return True
+        with self._lock:
+            t = self.tasks[box_id]
+            self.inflight[worker].discard(box_id)
+            if t.done:
+                return False
+            t.done = True
+            t.result = result
+            return True
+
+    def requeue(self, box_ids: Sequence[int]) -> int:
+        """Re-queue not-yet-done boxes (a failed/cancelled attempt handing
+        its work back — boxes are idempotent, so re-running is exact).
+        Returns how many were actually re-queued; already-done boxes are
+        skipped, which is the dedup-by-box-id contract."""
+        n = 0
+        with self._lock:
+            for tid in box_ids:
+                t = self.tasks[tid]
+                if t.done:
+                    continue
+                t.assigned_to = None
+                self.queue.append(tid)
+                self.requeues += 1
+                n += 1
+        return n
+
+    def pending(self) -> List[int]:
+        """Box ids not yet effectively completed, in box order."""
+        with self._lock:
+            return [i for i in sorted(self.tasks) if not self.tasks[i].done]
 
     def all_done(self) -> bool:
-        return all(t.done for t in self.tasks.values())
+        with self._lock:
+            return all(t.done for t in self.tasks.values())
 
     def results(self):
-        return [self.tasks[i].result for i in sorted(self.tasks)]
+        with self._lock:
+            return [self.tasks[i].result for i in sorted(self.tasks)]
 
 
 def fail_worker(sched: BoxScheduler, worker: int) -> int:
     """Simulated worker death: re-queue its in-flight boxes. Returns count."""
-    tids = list(sched.inflight[worker])
-    for tid in tids:
-        sched.inflight[worker].discard(tid)
-        if not sched.tasks[tid].done:
-            sched.queue.append(tid)
-    return len(tids)
+    with sched._lock:
+        tids = list(sched.inflight[worker])
+        for tid in tids:
+            sched.inflight[worker].discard(tid)
+            if not sched.tasks[tid].done:
+                sched.queue.append(tid)
+        return len(tids)

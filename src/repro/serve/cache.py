@@ -1,0 +1,229 @@
+"""Multi-tenant shared ``SliceCache`` for the serving layer.
+
+One warm graph serves many concurrent queries, and adjacent queries walk
+overlapping row ranges — the whole point of a resident server is that
+query B hits the slabs query A just pulled in. But a naively shared LRU
+lets one scan-heavy query evict everything, silently destroying the
+budget-partition contract admission control just established.
+
+``SharedSliceCache`` extends the single-query :class:`~repro.core.executor.
+SliceCache` with *tenants*:
+
+* every admitted query registers with a **floor** — a slice of the cache
+  budget reserved for it (``Σ floors ≤ budget_words``, checked);
+* every cached block has an **owner**: the tenant whose miss fetched it
+  (blocks of departed tenants become ownerless);
+* eviction is **floor-protected LRU**: walking blocks in global LRU
+  order, a block is evictable only if it is ownerless or its owner holds
+  strictly more cached words than its floor *after* the eviction. A
+  tenant therefore always keeps at least ``floor`` words of its own
+  hottest blocks resident no matter what its neighbours do — its miss
+  count is bounded by a solo run with a ``floor``-sized cache
+  (inclusion), while everything above the floors is genuinely shared
+  (cross-tenant hits are free wins, and the stress suite checks they
+  only ever *reduce* cache-layer misses).
+
+Accounting is two-level: per-tenant ``{hits, misses, hit_words,
+miss_words, passthrough_words, words}`` plus the inherited global
+counters — the property tests assert the tenant ledgers sum exactly to
+the global one. ``snapshot()`` byte-captures the cache contents so the
+fault-injection suite can prove a failed query never poisons what its
+neighbours see.
+
+Tenants access the cache through :class:`TenantView`, which looks like an
+EdgeSource (it IS what the server hands ``QueryEngine`` as a relation):
+``read_rows`` routes through the shared cache with this tenant's
+attribution; every other attribute proxies to the underlying source.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.executor import SliceCache
+
+
+class TenantStats:
+    """Mutable per-tenant cache ledger (kept after ``unregister``)."""
+
+    __slots__ = ("floor", "words", "hits", "misses",
+                 "hit_words", "miss_words", "passthrough_words")
+
+    def __init__(self, floor: int):
+        self.floor = int(floor)
+        self.words = 0
+        self.hits = 0
+        self.misses = 0
+        self.hit_words = 0
+        self.miss_words = 0
+        self.passthrough_words = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return {k: getattr(self, k) for k in self.__slots__}
+
+
+class SharedSliceCache(SliceCache):
+    """One cache, many queries; floor-protected eviction (module doc)."""
+
+    def __init__(self, source, budget_words: int,
+                 block_rows: Optional[int] = None):
+        super().__init__(source, budget_words, block_rows)
+        self._owner: Dict[int, object] = {}       # block id -> tenant | None
+        self._tenants: Dict[object, TenantStats] = {}
+        self._gone: Dict[object, TenantStats] = {}  # stats after unregister
+        self._cur: Optional[object] = None          # tenant of current read
+        self.cross_hits = 0      # hits on a block some other tenant fetched
+
+    # -- tenant lifecycle ----------------------------------------------------
+
+    def register(self, tenant, floor_words: int = 0) -> "TenantView":
+        with self._lock:
+            if tenant in self._tenants:
+                raise ValueError(f"tenant {tenant!r} already registered")
+            floors = sum(t.floor for t in self._tenants.values())
+            floor_words = int(floor_words)
+            if floors + floor_words > self.budget_words:
+                raise ValueError(
+                    f"floor {floor_words} would oversubscribe the cache: "
+                    f"{floors}/{self.budget_words} words already reserved")
+            self._tenants[tenant] = TenantStats(floor_words)
+            return TenantView(self, tenant)
+
+    def unregister(self, tenant) -> TenantStats:
+        """Drop a tenant: its blocks stay cached (warm for neighbours) but
+        become ownerless — freely evictable. Returns its final ledger."""
+        with self._lock:
+            st = self._tenants.pop(tenant)
+            for bid, owner in list(self._owner.items()):
+                if owner == tenant:
+                    self._owner[bid] = None
+            self._gone[tenant] = st
+            return st
+
+    def tenant_stats(self, tenant) -> TenantStats:
+        with self._lock:
+            return self._tenants.get(tenant) or self._gone[tenant]
+
+    # -- attributed reads ----------------------------------------------------
+
+    def read_rows_for(self, tenant, lo: int,
+                      hi: int) -> Tuple[np.ndarray, np.ndarray]:
+        with self._lock:
+            if tenant not in self._tenants:
+                raise KeyError(f"tenant {tenant!r} not registered")
+            prev, self._cur = self._cur, tenant
+            try:
+                return self._read_rows_locked(lo, hi)
+            finally:
+                self._cur = prev
+
+    # -- SliceCache hooks: per-tenant attribution ----------------------------
+
+    def _hit(self, bid: int, ent) -> None:
+        super()._hit(bid, ent)
+        st = self._tenants.get(self._cur)
+        if st is not None:
+            st.hits += 1
+            st.hit_words += len(ent[1])
+        if self._owner.get(bid) != self._cur:
+            self.cross_hits += 1
+
+    def _miss(self, n_blocks: int, n_words: int) -> None:
+        super()._miss(n_blocks, n_words)
+        st = self._tenants.get(self._cur)
+        if st is not None:
+            st.misses += n_blocks
+            st.miss_words += n_words
+
+    def _read_through(self, lo: int, hi: int):
+        ip, vals = super()._read_through(lo, hi)
+        st = self._tenants.get(self._cur)
+        if st is not None:
+            st.passthrough_words += len(vals)
+        return ip, vals
+
+    # -- floor-protected eviction --------------------------------------------
+
+    def _evictable_locked(self, bid: int) -> bool:
+        owner = self._owner.get(bid)
+        st = self._tenants.get(owner) if owner is not None else None
+        if st is None:
+            return True
+        return st.words - self._entry_words(self._blocks[bid]) >= st.floor
+
+    def _insert(self, bid: int, ent) -> None:
+        # (re)charge the inserting tenant for this block
+        old = self._blocks.pop(bid, None)
+        if old is not None:
+            self._words -= self._entry_words(old)
+            self._uncharge(bid, old)
+        self._blocks[bid] = ent
+        self._words += self._entry_words(ent)
+        self._owner[bid] = self._cur
+        st = self._tenants.get(self._cur)
+        if st is not None:
+            st.words += self._entry_words(ent)
+        while self._words > self.budget_words and len(self._blocks) > 1:
+            victim = None
+            for vbid in self._blocks:           # global LRU order
+                if vbid != bid and self._evictable_locked(vbid):
+                    victim = vbid
+                    break
+            if victim is None:
+                # every other resident block sits inside some tenant's
+                # floor: soft-exceed the budget rather than break the
+                # reservation contract (the floors sum ≤ budget, so the
+                # overshoot is bounded by one block per tenant)
+                break
+            vent = self._blocks.pop(victim)
+            self._words -= self._entry_words(vent)
+            self._uncharge(victim, vent)
+
+    def _uncharge(self, bid: int, ent) -> None:
+        owner = self._owner.pop(bid, None)
+        st = self._tenants.get(owner) if owner is not None else None
+        if st is not None:
+            st.words -= self._entry_words(ent)
+
+    def clear(self) -> None:
+        with self._lock:
+            super().clear()
+            self._owner.clear()
+            for st in self._tenants.values():
+                st.words = 0
+
+    # -- fault-injection forensics -------------------------------------------
+
+    def snapshot(self) -> Dict[int, Tuple[bytes, bytes]]:
+        """Byte-exact capture of the cache contents (LRU order implicit in
+        key iteration): the poisoning test diffs this across a failed
+        neighbour query."""
+        with self._lock:
+            return {bid: (ent[0].tobytes(), ent[1].tobytes())
+                    for bid, ent in self._blocks.items()}
+
+
+class TenantView:
+    """EdgeSource facade binding one tenant to the shared cache.
+
+    ``read_rows`` goes through the shared cache with this tenant's
+    attribution; all other attributes (``n_nodes``, ``degrees``,
+    ``indptr``, ``device``, ...) proxy to the wrapped source, so a
+    ``QueryEngine`` can use a view anywhere it accepts an EdgeSource.
+    """
+
+    def __init__(self, shared: SharedSliceCache, tenant):
+        self._shared = shared
+        self._tenant = tenant
+
+    def read_rows(self, lo: int, hi: int) -> Tuple[np.ndarray, np.ndarray]:
+        return self._shared.read_rows_for(self._tenant, lo, hi)
+
+    @property
+    def stats(self) -> TenantStats:
+        return self._shared.tenant_stats(self._tenant)
+
+    def __getattr__(self, name):
+        return getattr(self._shared.source, name)

@@ -1,0 +1,173 @@
+"""Crossover calibration cache: concurrency + persistence regressions.
+
+The measured density-crossover (``core.engine``) persists per
+``<backend>:<device_kind>`` under ``$REPRO_CACHE_DIR/crossover.json``.
+Three historical hazards pinned here:
+
+* the cache dir override (``REPRO_CACHE_DIR``) must be honoured — CI and
+  multi-user machines can't share ``~/.cache``;
+* stores are atomic (tmp + ``os.replace``): a reader never observes a
+  half-written JSON file;
+* **the lost-update race** (the PR-8 fix): two processes that measure
+  concurrently each do load → merge → store; without the ``flock`` held
+  across the whole read-modify-write, the slower process clobbers the
+  faster one's freshly-persisted keys. The two-process test constructs
+  exactly that interleaving deterministically: process A holds the lock
+  with its (stale) load in hand while process B runs a full
+  ``_cached_crossover`` — with the fix B serializes behind A and both
+  keys survive; without it B's entry is lost.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.core import engine as eng
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+@pytest.fixture()
+def cache_dir(tmp_path, monkeypatch):
+    d = tmp_path / "repro-cache"
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(d))
+    # the process-level memo would shadow the file under test
+    monkeypatch.setattr(eng, "_crossover_memo", {})
+    return d
+
+
+def _load(cache_dir) -> dict:
+    with open(cache_dir / "crossover.json") as f:
+        return json.load(f)
+
+
+class TestCacheFile:
+    def test_cache_dir_override_is_honoured(self, cache_dir):
+        assert eng._crossover_cache_file() == \
+            str(cache_dir / "crossover.json")
+        calls = []
+        v = eng._cached_crossover(":t_override", 64,
+                                  lambda: calls.append(1) or 0.25)
+        assert v == 0.25 and calls == [1]
+        data = _load(cache_dir)
+        assert any(k.endswith(":t_override") for k in data), data
+
+    def test_file_hit_skips_measure(self, cache_dir):
+        eng._cached_crossover(":t_hit", 64, lambda: 0.25)
+        eng._crossover_memo.clear()          # simulate a fresh process
+        v = eng._cached_crossover(
+            ":t_hit", 64,
+            lambda: pytest.fail("measure ran despite a cached value"))
+        assert v == 0.25
+
+    def test_corrupt_file_degrades_to_remeasure(self, cache_dir):
+        os.makedirs(cache_dir, exist_ok=True)
+        with open(cache_dir / "crossover.json", "w") as f:
+            f.write('{"trunca')             # a torn write without os.replace
+        assert eng._crossover_load() == {}
+        assert eng._cached_crossover(":t_corrupt", 64, lambda: 0.5) == 0.5
+        assert any(k.endswith(":t_corrupt") for k in _load(cache_dir))
+
+    def test_store_leaves_no_tmp_droppings(self, cache_dir):
+        eng._crossover_store({"a": 0.5})
+        eng._crossover_store({"a": 0.5, "b": 0.25})
+        assert _load(cache_dir) == {"a": 0.5, "b": 0.25}
+        assert [p for p in os.listdir(cache_dir)
+                if p.endswith(".tmp")] == []
+
+
+class TestConcurrentRemeasure:
+    def test_threads_measuring_distinct_keys_all_persist(self, cache_dir):
+        """In-process concurrency: every thread's freshly-measured key
+        survives into the JSON file (each RMW holds the file lock, even
+        across threads — flock fds are per-open-file-description)."""
+        errs = []
+
+        def measure(i):
+            try:
+                eng._cached_crossover(f":t_thr{i}", 64, lambda: 0.25)
+            except Exception as e:               # noqa: BLE001
+                errs.append(e)
+
+        threads = [threading.Thread(target=measure, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(30)
+        assert not errs
+        data = _load(cache_dir)
+        for i in range(8):
+            assert any(k.endswith(f":t_thr{i}") for k in data), (i, data)
+
+    def test_two_process_lost_update_race(self, cache_dir, tmp_path):
+        """The regression: process A holds the file lock across its whole
+        read-modify-write (having loaded BEFORE B stores anything) while
+        process B runs a complete ``_cached_crossover``. B must serialize
+        behind A; afterwards the file contains BOTH keys. Without the
+        lock, B's store lands inside A's window and A's store erases it."""
+        a_ready = tmp_path / "a_ready"
+        b_started = tmp_path / "b_started"
+        env = {**os.environ, "REPRO_CACHE_DIR": str(cache_dir),
+               "JAX_PLATFORMS": "cpu", "PYTHONPATH": SRC}
+
+        proc_a = subprocess.Popen([sys.executable, "-c", f"""
+import os, time
+from repro.core import engine as eng
+with eng._crossover_file_lock():
+    data = eng._crossover_load()          # stale view, pre-B
+    open({str(a_ready)!r}, "w").close()
+    deadline = time.monotonic() + 30
+    while not os.path.exists({str(b_started)!r}) \\
+            and time.monotonic() < deadline:
+        time.sleep(0.01)
+    time.sleep(0.5)      # B is now inside _cached_crossover, blocked
+    data["procA:manual"] = 0.5
+    eng._crossover_store(data)
+"""], env=env)
+
+        deadline = time.monotonic() + 60
+        while not a_ready.exists() and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert a_ready.exists(), "process A never took the lock"
+
+        proc_b = subprocess.Popen([sys.executable, "-c", f"""
+import os
+open({str(b_started)!r}, "w").close()
+from repro.core import engine as eng
+eng._cached_crossover(":t_raceB", 64, lambda: 0.25)
+"""], env=env)
+        assert proc_b.wait(timeout=120) == 0
+        assert proc_a.wait(timeout=120) == 0
+
+        data = _load(cache_dir)
+        assert "procA:manual" in data, data
+        assert any(k.endswith(":t_raceB") for k in data), \
+            f"B's entry was clobbered by A's store (lost update): {data}"
+
+    def test_remeasure_clears_only_active_backend(self, cache_dir):
+        """``REPRO_CROSSOVER_REMEASURE=1`` in a fresh process drops the
+        active backend's entries and re-measures, but a foreign backend's
+        calibrations in the shared file survive."""
+        os.makedirs(cache_dir, exist_ok=True)
+        prefix = eng._active_prefix()
+        with open(cache_dir / "crossover.json", "w") as f:
+            json.dump({f"{prefix}:nv64:t_rm": 0.9,
+                       "tpu:TPU v4:nv64:t_rm": 0.125}, f)
+        env = {**os.environ, "REPRO_CACHE_DIR": str(cache_dir),
+               "JAX_PLATFORMS": "cpu", "PYTHONPATH": SRC,
+               "REPRO_CROSSOVER_REMEASURE": "1"}
+        out = subprocess.run([sys.executable, "-c", """
+from repro.core import engine as eng
+print(eng._cached_crossover(":t_rm", 64, lambda: 0.25))
+"""], env=env, capture_output=True, text=True, timeout=120)
+        assert out.returncode == 0, out.stderr
+        assert out.stdout.strip().endswith("0.25")
+        data = _load(cache_dir)
+        assert data["tpu:TPU v4:nv64:t_rm"] == 0.125   # foreign survives
+        assert data[f"{prefix}:nv64:t_rm"] == 0.25     # remeasured

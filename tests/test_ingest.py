@@ -323,6 +323,134 @@ class TestSliceCacheProperties:
 
 
 # ---------------------------------------------------------------------------
+# multi-tenant shared cache (repro.serve.cache): the single-query model
+# extended with per-tenant attribution + floor-protected eviction
+# ---------------------------------------------------------------------------
+
+def _tenant_windows_strategy(nv, n_tenants=3):
+    pair = st.tuples(st.integers(0, n_tenants - 1),
+                     st.integers(0, nv - 1), st.integers(0, nv - 1))
+    return st.lists(pair.map(lambda p: (p[0], min(p[1:]), max(p[1:]))),
+                    min_size=1, max_size=30)
+
+
+class TestSharedSliceCacheProperties:
+    NV = 512
+
+    @settings(max_examples=15, deadline=None)
+    @given(accesses=_tenant_windows_strategy(NV),
+           block_rows=st.integers(2, 16), budget=st.integers(256, 4096))
+    def test_tenant_ledgers_sum_to_global(self, cache_store, accesses,
+                                          block_rows, budget):
+        """Per-tenant hit/miss accounting partitions the global ledger
+        exactly: no access is double-counted or dropped, and per-tenant
+        resident words sum to the cache's word total."""
+        from repro.serve import SharedSliceCache
+        cache = SharedSliceCache(EdgeStore(cache_store),
+                                 budget_words=budget,
+                                 block_rows=block_rows)
+        views = {t: cache.register(t, floor_words=budget // 8)
+                 for t in range(3)}
+        for t, lo, hi in accesses:
+            views[t].read_rows(lo, hi)
+        stats = [cache.tenant_stats(t) for t in range(3)]
+        assert sum(s.hits for s in stats) == cache.hits
+        assert sum(s.misses for s in stats) == cache.misses
+        assert sum(s.hit_words for s in stats) == cache.hit_words
+        assert sum(s.miss_words for s in stats) == cache.miss_words
+        assert sum(s.passthrough_words for s in stats) == \
+            cache.passthrough_words
+        assert sum(s.words for s in stats) == cache._words
+
+    @settings(max_examples=15, deadline=None)
+    @given(accesses=_tenant_windows_strategy(NV),
+           block_rows=st.integers(2, 16), budget=st.integers(256, 2048))
+    def test_eviction_never_crosses_tenant_floor(self, cache_store,
+                                                 accesses, block_rows,
+                                                 budget):
+        """Once a tenant's resident words reach its reservation floor,
+        no eviction — its own inserts' or a neighbour's — ever takes it
+        below the floor again."""
+        from repro.serve import SharedSliceCache
+        cache = SharedSliceCache(EdgeStore(cache_store),
+                                 budget_words=budget,
+                                 block_rows=block_rows)
+        floors = {0: budget // 4, 1: budget // 8, 2: 0}
+        views = {t: cache.register(t, floor_words=f)
+                 for t, f in floors.items()}
+        reached = set()
+        for t, lo, hi in accesses:
+            views[t].read_rows(lo, hi)
+            for u, f in floors.items():
+                words = cache.tenant_stats(u).words
+                if words >= f:
+                    reached.add(u)
+                elif u in reached:
+                    raise AssertionError(
+                        f"tenant {u} evicted below its floor: "
+                        f"{words} < {f}")
+
+    @settings(max_examples=10, deadline=None)
+    @given(windows=_windows_strategy(NV), block_rows=st.integers(2, 16),
+           budget=st.integers(128, 2048))
+    def test_single_tenant_matches_plain_slicecache(self, cache_store,
+                                                    windows, block_rows,
+                                                    budget):
+        """With exactly one tenant the shared cache degenerates to the
+        plain ``SliceCache``: identical data, identical resident set and
+        recency order, identical hit/miss ledger."""
+        from repro.serve import SharedSliceCache
+        plain = SliceCache(EdgeStore(cache_store), budget_words=budget,
+                           block_rows=block_rows)
+        shared = SharedSliceCache(EdgeStore(cache_store),
+                                  budget_words=budget,
+                                  block_rows=block_rows)
+        view = shared.register("q0", floor_words=0)
+        for lo, hi in windows:
+            ip_p, v_p = plain.read_rows(lo, hi)
+            ip_s, v_s = view.read_rows(lo, hi)
+            np.testing.assert_array_equal(v_s, v_p)
+            np.testing.assert_array_equal(ip_s, ip_p)
+        assert list(shared._blocks) == list(plain._blocks)
+        assert (shared.hits, shared.misses) == (plain.hits, plain.misses)
+        assert (shared.hit_words, shared.miss_words) == \
+            (plain.hit_words, plain.miss_words)
+        assert shared._words == plain._words
+
+    @settings(max_examples=10, deadline=None)
+    @given(accesses=_tenant_windows_strategy(NV),
+           block_rows=st.integers(2, 16))
+    def test_reads_are_correct_and_unregister_frees_floor(
+            self, cache_store, accesses, block_rows):
+        """Every attributed read returns exactly what the store returns,
+        and unregistering a tenant releases its floor (a replacement
+        tenant registers at the same floor) while its blocks stay warm."""
+        from repro.serve import SharedSliceCache
+        store = EdgeStore(cache_store)
+        cache = SharedSliceCache(EdgeStore(cache_store),
+                                 budget_words=1024,
+                                 block_rows=block_rows)
+        views = {t: cache.register(t, floor_words=512) for t in range(2)}
+        with pytest.raises(ValueError, match="oversubscribe"):
+            cache.register(9, floor_words=512)
+        for t, lo, hi in accesses:
+            ip_c, v_c = views[t % 2].read_rows(lo, hi)
+            ip_r, v_r = store.read_rows(lo, hi)
+            np.testing.assert_array_equal(v_c, v_r)
+            np.testing.assert_array_equal(ip_c, ip_r)
+        resident = set(cache._blocks)
+        cache.unregister(0)
+        assert set(cache._blocks) == resident     # stays warm
+        view9 = cache.register(9, floor_words=512)  # floor freed
+        if resident:
+            bid = next(iter(resident))
+            br = cache.block_rows
+            view9.read_rows(bid * br, bid * br + br - 1)
+            assert cache.cross_hits > 0 or cache.tenant_stats(9).hits > 0 \
+                or cache.tenant_stats(9).misses > 0
+
+
+# ---------------------------------------------------------------------------
 # reader format checks fail loudly (docs/EDGESTORE_FORMAT.md contract)
 # ---------------------------------------------------------------------------
 

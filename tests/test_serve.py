@@ -1,0 +1,504 @@
+"""Serving layer (PR 8): concurrency stress, admission invariants,
+cancellation, fault injection, pagination.
+
+Everything pins against the single-query engines as oracles: a served
+query must return byte-identical results to a solo ``QueryEngine`` run,
+under any interleaving the thread scheduler produces — concurrency may
+change *timing*, never *results*. The admission invariants (reservations
+partition ``mem_words``; a query's measured block reads stay within its
+solo envelope at its admitted budget) are the serving layer's version of
+the paper's Thm. 10/13 contract.
+"""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.graphs import random_graph, rmat_graph
+from repro.query import QueryEngine
+from repro.query.patterns import PATTERNS
+from repro.serve import (AdmissionController, AdmissionRejected,
+                         AdmissionTimeout, QueryCancelled, QueryFailed,
+                         Server, Session)
+
+ENV_WORKERS = max(2, int(os.environ.get("REPRO_TEST_WORKERS", "2")))
+
+GRAPH = rmat_graph(512, 6000, seed=21)
+SMALL = random_graph(200, 1500, seed=7)
+
+NAMES = ["triangle", "four_clique", "path3"]
+
+
+def canon(rows: np.ndarray) -> np.ndarray:
+    """Row-set canonical form (lexicographic sort) for order-insensitive
+    listing comparison."""
+    if len(rows) == 0:
+        return rows
+    return rows[np.lexsort(rows.T[::-1])]
+
+
+_ORACLE = {}
+
+
+def oracle(name: str, mode: str = "count", graph=GRAPH):
+    key = (name, mode, id(graph))
+    if key not in _ORACLE:
+        src, dst = graph
+        eng = QueryEngine.from_graph(PATTERNS[name](), src, dst,
+                                     mem_words=1 << 14)
+        _ORACLE[key] = eng.count() if mode == "count" else canon(eng.list())
+    return _ORACLE[key]
+
+
+def serve_server(graph=GRAPH, **kw):
+    kw.setdefault("mem_words", 1 << 15)
+    kw.setdefault("use_pallas_kernels", False)
+    src, dst = graph
+    return Server.from_graph(src, dst, **kw)
+
+
+def assert_no_thread_leak(base: int) -> None:
+    deadline = time.monotonic() + 10
+    while threading.active_count() > base and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() == base
+
+
+# ---------------------------------------------------------------------------
+# served results == solo-engine oracle
+# ---------------------------------------------------------------------------
+
+class TestServeMatchesOracle:
+    @pytest.mark.parametrize("name", NAMES)
+    @pytest.mark.parametrize("mode", ["count", "list"])
+    def test_single_query(self, name, mode):
+        with serve_server() as srv:
+            h = srv.submit(name, mode)
+            got = h.result(timeout=300)
+            if mode == "count":
+                assert got == oracle(name)
+            else:
+                np.testing.assert_array_equal(canon(got),
+                                              oracle(name, "list"))
+            assert h.status == "done"
+            assert h.stats is not None and h.stats.n_boxes >= 1
+
+    def test_session_facade(self):
+        with serve_server() as srv, Session(srv) as ses:
+            assert ses.count("triangle") == oracle("triangle")
+            np.testing.assert_array_equal(canon(ses.list("path3")),
+                                          oracle("path3", "list"))
+
+    def test_repeated_shape_hits_plan_cache(self):
+        with serve_server() as srv:
+            for _ in range(3):
+                assert srv.submit("triangle").result(300) == \
+                    oracle("triangle")
+            assert srv.plan_misses == 1
+            assert srv.plan_hits == 2
+
+    def test_unknown_pattern_and_relation_reject_at_submit(self):
+        with serve_server() as srv:
+            with pytest.raises(ValueError, match="unknown pattern"):
+                srv.submit("pentagon")
+            q = PATTERNS["triangle"]()
+            bad = type(q)(head=q.head,
+                          atoms=[type(a)("R", a.vars) for a in q.atoms])
+            with pytest.raises(ValueError, match="unknown relation"):
+                srv.submit(bad)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis concurrency stress: random mixes from N threads
+# ---------------------------------------------------------------------------
+
+class TestConcurrencyStress:
+    @settings(max_examples=4, deadline=None)
+    @given(mix=st.lists(st.tuples(st.sampled_from(NAMES),
+                                  st.sampled_from(["count", "list"])),
+                        min_size=2, max_size=6),
+           workers=st.sampled_from([1, ENV_WORKERS]),
+           cache_on=st.booleans())
+    def test_random_mix_from_threads(self, mix, workers, cache_on):
+        base = threading.active_count()
+        srv = serve_server(graph=SMALL, mem_words=1 << 15,
+                           cache_words=(1 << 15) if cache_on else 0,
+                           workers_per_query=workers, max_active=4,
+                           queue_depth=16)
+        errors, results = [], {}
+        over = []        # admission-invariant violations seen by a sampler
+        stop = threading.Event()
+
+        def sampler():
+            while not stop.is_set():
+                r = srv.admission.reserved_words
+                if r > srv.mem_words:
+                    over.append(r)
+                time.sleep(0.002)
+
+        def client(i, name, mode):
+            try:
+                h = srv.submit(name, mode, timeout=120)
+                results[i] = (name, mode, h.result(timeout=300),
+                              h.admitted_words)
+            except Exception as e:               # noqa: BLE001 — collected
+                errors.append((i, name, mode, e))
+
+        st_t = threading.Thread(target=sampler)
+        st_t.start()
+        threads = [threading.Thread(target=client, args=(i, nm, md))
+                   for i, (nm, md) in enumerate(mix)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(300)
+        stop.set()
+        st_t.join(10)
+        try:
+            assert not errors, errors
+            assert not over, over
+            assert len(results) == len(mix)
+            for i, (name, mode, got, m_i) in results.items():
+                assert m_i >= srv.admission.min_words
+                if mode == "count":
+                    assert got == oracle(name, graph=SMALL), (name, got)
+                else:
+                    np.testing.assert_array_equal(
+                        canon(got), oracle(name, "list", graph=SMALL))
+            # every reservation returned to the pool
+            assert srv.admission.reserved_words == 0
+            assert srv.admission.active == 0
+            assert srv.admission.peak_reserved <= srv.mem_words
+        finally:
+            srv.close()
+        assert_no_thread_leak(base)
+
+
+# ---------------------------------------------------------------------------
+# admission invariants (per-query envelope + controller unit tests)
+# ---------------------------------------------------------------------------
+
+class TestSoloEnvelope:
+    def test_block_reads_within_solo_envelope(self):
+        """Serial served queries: each reads no more device blocks than
+        its solo run at its admitted budget m_i — the shared warm stack
+        (bigger shared cache, warm frames) only ever helps."""
+        with serve_server(mem_words=1 << 15) as srv:
+            for name in NAMES:
+                h = srv.submit(name, "count")
+                got = h.result(300)
+                solo, solo_stats = srv.solo_run(name, "count",
+                                                words=h.admitted_words)
+                assert got == solo
+                assert h.stats.block_reads <= solo_stats.block_reads, name
+
+    def test_warm_cache_strictly_reduces_repeat_reads(self):
+        with serve_server(mem_words=1 << 15) as srv:
+            h1 = srv.submit("triangle")
+            h1.result(300)
+            h2 = srv.submit("triangle")
+            h2.result(300)
+            assert h2.stats.cache_hits > 0
+            assert h2.stats.block_reads <= h1.stats.block_reads
+
+
+class TestAdmissionController:
+    def test_sum_of_reservations_bounded_under_hammering(self):
+        ctrl = AdmissionController(1 << 16, min_words=1 << 10,
+                                   queue_depth=64)
+        over, errors = [], []
+
+        def hammer(seed):
+            rng = np.random.default_rng(seed)
+            for _ in range(30):
+                try:
+                    res = ctrl.acquire(
+                        int(rng.integers(1 << 10, 1 << 15)), timeout=30)
+                except AdmissionTimeout:
+                    continue
+                except Exception as e:           # noqa: BLE001
+                    errors.append(e)
+                    return
+                if ctrl.reserved_words > ctrl.total_words:
+                    over.append(ctrl.reserved_words)
+                time.sleep(0.001)
+                res.release()
+
+        threads = [threading.Thread(target=hammer, args=(s,))
+                   for s in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(60)
+        assert not errors and not over
+        assert ctrl.reserved_words == 0 and ctrl.active == 0
+        assert ctrl.peak_reserved <= ctrl.total_words
+
+    def test_fair_share_shrinks_under_contention(self):
+        ctrl = AdmissionController(1 << 16, min_words=1 << 8)
+        alone = ctrl.acquire()
+        assert alone.words == 1 << 16       # alone: the whole budget
+        alone.release()
+        r1 = ctrl.acquire(want_words=1 << 14)
+        assert r1.words == 1 << 14          # want caps the grant
+        r2 = ctrl.acquire()                 # fair share: total // 2
+        assert r2.words == 1 << 15
+        r3 = ctrl.acquire()                 # total // 3, pow2, clipped
+        assert r3.words == 1 << 14
+        assert ctrl.reserved_words <= ctrl.total_words
+        for r in (r1, r2, r3):
+            r.release()
+        assert ctrl.reserved_words == 0
+
+    def test_nonblocking_reject_and_timeout(self):
+        ctrl = AdmissionController(1 << 12, min_words=1 << 12)
+        held = ctrl.acquire()
+        with pytest.raises(AdmissionRejected):
+            ctrl.acquire(block=False)
+        with pytest.raises(AdmissionTimeout):
+            ctrl.acquire(timeout=0.05)
+        held.release()
+        ctrl.acquire(block=False).release()   # capacity is back
+
+    def test_queue_depth_bounds_waiters(self):
+        ctrl = AdmissionController(1 << 12, min_words=1 << 12,
+                                   queue_depth=1)
+        held = ctrl.acquire()
+        waiter_err = []
+
+        def waiter():
+            try:
+                ctrl.acquire(timeout=5).release()
+            except Exception as e:               # noqa: BLE001
+                waiter_err.append(e)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        deadline = time.monotonic() + 5
+        while ctrl.waiting < 1 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        with pytest.raises(AdmissionRejected, match="queue full"):
+            ctrl.acquire(timeout=5)
+        held.release()
+        t.join(10)
+        assert not waiter_err
+
+    def test_release_is_idempotent(self):
+        ctrl = AdmissionController(1 << 12, min_words=1 << 10)
+        res = ctrl.acquire()
+        res.release()
+        res.release()
+        assert ctrl.reserved_words == 0 and ctrl.active == 0
+
+    def test_min_words_above_total_rejected(self):
+        with pytest.raises(ValueError, match="min_words"):
+            AdmissionController(100, min_words=200)
+
+
+class TestServerAdmission:
+    def test_oversubscription_rejects_then_recovers(self):
+        with serve_server(mem_words=1 << 14, min_words=1 << 14,
+                          max_active=1, queue_depth=0) as srv:
+            gate = threading.Event()
+            srv.fault_hook = lambda stage, qid, i: gate.wait(30)
+            slow = srv.submit("triangle")
+            deadline = time.monotonic() + 10
+            while srv.admission.active < 1 and time.monotonic() < deadline:
+                time.sleep(0.005)
+            with pytest.raises(AdmissionRejected):
+                srv.submit("triangle", block=False)
+            gate.set()
+            srv.fault_hook = None
+            assert slow.result(300) == oracle("triangle")
+            assert srv.submit("triangle").result(300) == oracle("triangle")
+
+
+# ---------------------------------------------------------------------------
+# cancellation: mid-query, no leaks, neighbours unaffected
+# ---------------------------------------------------------------------------
+
+class TestCancellation:
+    def test_cancel_mid_query_leaves_server_serving(self):
+        base = threading.active_count()
+        srv = serve_server(mem_words=1 << 13, max_active=4,
+                          workers_per_query=ENV_WORKERS)
+        try:
+            boxes_seen = []
+            gate = threading.Event()
+
+            def slow_hook(stage, qid, i):
+                if stage == "work" and qid == "q0":
+                    boxes_seen.append(i)
+                    gate.wait(0.05)
+
+            srv.fault_hook = slow_hook
+            victim = srv.submit("four_clique")
+            deadline = time.monotonic() + 30
+            while not boxes_seen and time.monotonic() < deadline:
+                time.sleep(0.002)
+            victim.cancel()
+            assert victim.wait(60)
+            srv.fault_hook = None
+            assert victim.status == "cancelled"
+            with pytest.raises(QueryCancelled):
+                victim.result(5)
+            # a cancelled query abandoned boxes mid-plan
+            assert len(boxes_seen) < victim.stats.n_boxes \
+                if victim.stats else True
+            # the server is intact: admission drained, next query exact
+            assert srv.admission.reserved_words == 0
+            assert srv.submit("triangle").result(300) == oracle("triangle")
+        finally:
+            srv.close()
+        assert_no_thread_leak(base)
+
+    def test_close_cancels_everything_without_leaks(self):
+        base = threading.active_count()
+        srv = serve_server(mem_words=1 << 13, max_active=8)
+        srv.fault_hook = lambda stage, qid, i: time.sleep(0.01)
+        handles = [srv.submit("four_clique") for _ in range(3)]
+        srv.close()
+        for h in handles:
+            assert h.done()
+        assert_no_thread_leak(base)
+
+
+# ---------------------------------------------------------------------------
+# fault injection: flaky stages recover via re-queue; failures contained
+# ---------------------------------------------------------------------------
+
+class TestFaultInjection:
+    @pytest.mark.parametrize("stage", ["fetch", "work"])
+    def test_flaky_stage_recovers_with_exact_dedup(self, stage):
+        """A box whose fetch (store read) / work (box worker) raises N
+        times recovers through ``BoxScheduler.requeue``: the flaky box is
+        re-attempted exactly N extra times, every other box runs once
+        (dedup by box id), and the result is exact."""
+        attempts = {}
+        lock = threading.Lock()
+
+        def flaky(stg, qid, i):
+            if stg != stage:
+                return
+            with lock:
+                attempts[i] = attempts.get(i, 0) + 1
+                if i == 0 and attempts[i] <= 2:
+                    raise OSError(f"injected {stage} fault #{attempts[i]}")
+
+        with serve_server(mem_words=1 << 13, box_retries=2) as srv:
+            srv.fault_hook = flaky
+            h = srv.submit("triangle")
+            assert h.result(300) == oracle("triangle")
+            assert h.status == "done"
+            assert h.retry_rounds >= 1
+            assert attempts[0] == 3                  # 2 failures + success
+            assert all(n == 1 for i, n in attempts.items() if i != 0), \
+                attempts
+
+    def test_flaky_listing_recovers(self):
+        calls = {"n": 0}
+
+        def flaky(stg, qid, i):
+            if stg == "fetch" and i == 1:
+                calls["n"] += 1
+                if calls["n"] <= 2:
+                    raise OSError("injected read fault")
+
+        with serve_server(mem_words=1 << 13, box_retries=2) as srv:
+            srv.fault_hook = flaky
+            rows = srv.submit("path3", "list").result(300)
+            np.testing.assert_array_equal(canon(rows),
+                                          oracle("path3", "list"))
+
+    def test_exhausted_retries_fail_cleanly_without_poisoning_cache(self):
+        """A permanently failing query errors out per-query: the server
+        keeps serving, admission drains, and the shared cache's contents
+        are byte-identical before and after the failed run."""
+        with serve_server(mem_words=1 << 14, cache_words=1 << 20,
+                          box_retries=1) as srv:
+            warm = srv.submit("triangle")
+            assert warm.result(300) == oracle("triangle")
+            before = {n: c.snapshot() for n, c in srv.caches.items()}
+            assert any(before.values())      # the warm run cached blocks
+
+            def always_fail(stg, qid, i):
+                if stg == "fetch":
+                    raise OSError("store is gone")
+
+            srv.fault_hook = always_fail
+            victim = srv.submit("triangle")
+            with pytest.raises(QueryFailed, match="still failing"):
+                victim.result(300)
+            assert victim.status == "error"
+            srv.fault_hook = None
+
+            after = {n: c.snapshot() for n, c in srv.caches.items()}
+            assert before == after           # byte-compared, no poisoning
+            assert srv.admission.reserved_words == 0
+            assert srv.submit("triangle").result(300) == oracle("triangle")
+
+    def test_failure_does_not_disturb_concurrent_query(self):
+        def fail_q(stg, qid, i):
+            if qid == "q0" and stg == "work":
+                raise RuntimeError("victim box explodes")
+
+        with serve_server(mem_words=1 << 15, max_active=4,
+                          box_retries=0) as srv:
+            srv.fault_hook = fail_q
+            victim = srv.submit("triangle")
+            bystander = srv.submit("path3")
+            with pytest.raises(QueryFailed):
+                victim.result(300)
+            assert bystander.result(300) == oracle("path3")
+
+
+# ---------------------------------------------------------------------------
+# streamed listing: plan-order pages through the bounded queue
+# ---------------------------------------------------------------------------
+
+class TestPagination:
+    def test_pages_concatenate_to_exact_listing_in_plan_order(self):
+        with serve_server(mem_words=1 << 14, page_rows=256,
+                          page_queue_depth=2) as srv:
+            plain = srv.submit("path3", "list").result(300)
+            h = srv.submit("path3", "list", stream=True)
+            pages = list(h.pages())
+            assert all(len(p) <= 256 for p in pages)
+            got = np.concatenate(pages) if pages \
+                else np.zeros((0, plain.shape[1]), np.int64)
+            # identical rows in identical (plan) order, not just as a set
+            np.testing.assert_array_equal(got, plain)
+            assert h.result(60) is not None    # full result still kept
+
+    def test_slow_consumer_backpressure(self):
+        with serve_server(mem_words=1 << 13, page_rows=64,
+                          page_queue_depth=1) as srv:
+            h = srv.submit("path3", "list", stream=True)
+            total = 0
+            for page in h.pages():
+                total += len(page)
+                time.sleep(0.002)              # consumer slower than pool
+            assert total == len(oracle("path3", "list"))
+
+    def test_cancel_mid_stream_raises_for_consumer(self):
+        with serve_server(mem_words=1 << 12, page_rows=8,
+                          page_queue_depth=1) as srv:
+            srv.fault_hook = lambda stg, qid, i: time.sleep(0.005)
+            h = srv.submit("path3", "list", stream=True)
+            with pytest.raises(QueryCancelled):
+                for i, _page in enumerate(h.pages()):
+                    if i == 1:
+                        h.cancel()
+            assert h.wait(60)
+            assert h.status == "cancelled"
+
+    def test_pages_requires_stream_submission(self):
+        with serve_server() as srv:
+            h = srv.submit("triangle", "count")
+            h.result(300)
+            with pytest.raises(Exception, match="stream"):
+                h.pages()
