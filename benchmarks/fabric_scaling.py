@@ -1,0 +1,112 @@
+"""Distributed box-fabric scaling: shard count vs wall time, balance and
+shipped bytes — with the correctness gates asserted inline.
+
+For mesh shapes {1, 2, 4, 8} over an RMAT graph, runs the triangle and
+4-clique fabrics and enforces, per shape:
+
+* **exactness** — the distributed count equals the single-host
+  ``QueryEngine`` oracle;
+* **ledger additivity** — the summed per-shard measured ``block_reads``
+  equal the sum over solo oracle engines running the same restricted
+  plans (distribution adds no hidden I/O).
+
+Reported per run: wall time, LPT balance (max shard mass / mean nonzero
+mass), total shipped words, and the summed shard block reads.
+
+CI runs ``python -m benchmarks.fabric_scaling --smoke --json
+fabric-scaling.json`` and uploads the record.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List
+
+from .common import emit
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def run_fabric(pattern: str, graph, *, n_shards: int, mem_words: int,
+               label: str) -> dict:
+    from repro.parallel.fabric import Fabric
+    from repro.query.executor import QueryEngine
+    from repro.query.patterns import PATTERNS
+
+    src, dst = graph
+    solo = QueryEngine.from_graph(PATTERNS[pattern](), src, dst,
+                                  mem_words=mem_words)
+    want = solo.count()
+
+    fab = Fabric.from_graph(PATTERNS[pattern](), src, dst,
+                            n_shards=n_shards, mem_words=mem_words,
+                            io_block_words=64)
+    t0 = time.perf_counter()
+    got = fab.count()
+    wall = time.perf_counter() - t0
+    assert got == want, (label, got, want)
+
+    oracle_reads = 0
+    for s in range(n_shards):
+        orc = fab.oracle_engine(s)
+        orc.run_boxes("count")
+        oracle_reads += orc.stats.block_reads
+    assert fab.stats.sum_block_reads == oracle_reads, \
+        (label, fab.stats.sum_block_reads, oracle_reads)
+
+    out = {
+        "label": label, "pattern": pattern, "n_shards": n_shards,
+        "count": int(got), "wall_s": round(wall, 4),
+        "balance": round(fab.stats.balance, 3),
+        "shipped_words": int(sum(fab.stats.shipped_words)),
+        "sum_block_reads": int(fab.stats.sum_block_reads),
+        "n_boxes": int(fab.stats.n_boxes),
+    }
+    emit(f"{label}/count", 1e6 * wall,
+         f"n={got} shards={n_shards} boxes={out['n_boxes']} "
+         f"balance={out['balance']}")
+    emit(f"{label}/io", 1e6 * wall,
+         f"sum_block_reads={out['sum_block_reads']}==solo_sum "
+         f"shipped_words={out['shipped_words']}")
+    return out
+
+
+def main(fast: bool = False, smoke: bool = False,
+         json_path: str | None = None) -> None:
+    from repro.data.graphs import rmat_graph
+
+    if smoke or fast:
+        # budget below the input size so the plan actually boxes and the
+        # LPT schedule has real work to balance
+        graph = rmat_graph(256, 2500, seed=17)
+        mem_words = 1 << 10
+        shapes: List[int] = [1, 4]
+    else:
+        graph = rmat_graph(1024, 20000, seed=17)
+        mem_words = 1 << 12
+        shapes = list(SHARD_COUNTS)
+
+    results = []
+    for pattern in ("triangle", "four_clique"):
+        for n in shapes:
+            results.append(run_fabric(
+                pattern, graph, n_shards=n, mem_words=mem_words,
+                label=f"fabric_{pattern}_s{n}"))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"runs": results}, f, indent=2)
+        print(f"# wrote {json_path} ({len(results)} runs)", flush=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="the CI gate: shapes {1, 4} at fast sizes, "
+                         "exactness + ledger additivity asserted")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    a = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(fast=a.fast, smoke=a.smoke, json_path=a.json)

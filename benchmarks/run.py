@@ -11,6 +11,7 @@
   kernels Pallas kernels vs references          (benchmarks.kernel_bench)
   roofline per-cell roofline terms from dry-run (benchmarks.roofline)
   serve   concurrent serving latency + envelope (benchmarks.serve_load)
+  fabric  distributed box-fabric shard scaling  (benchmarks.fabric_scaling)
 
 Prints ``name,us_per_call,derived`` CSV. ``--fast`` shrinks sizes;
 ``--only fig9`` runs a single suite; ``--smoke`` is the CI gate — the
@@ -42,9 +43,10 @@ def main() -> None:
     if args.smoke:
         args.fast = True
 
-    from . import (arboricity_scaling, boxing_overhead, kernel_bench,
-                   lftj_vs_mgt, outofcore, parallel_scaling, query_patterns,
-                   roofline, serve_load, skew_scaling, vanilla_vs_boxed)
+    from . import (arboricity_scaling, boxing_overhead, fabric_scaling,
+                   kernel_bench, lftj_vs_mgt, outofcore, parallel_scaling,
+                   query_patterns, roofline, serve_load, skew_scaling,
+                   vanilla_vs_boxed)
     from .common import collected_rows, reset_rows
 
     suites = {
@@ -59,6 +61,7 @@ def main() -> None:
         "kernels": kernel_bench.main,
         "roofline": roofline.main,
         "serve": serve_load.main,
+        "fabric": fabric_scaling.main,
     }
     if args.only:
         names = [args.only]

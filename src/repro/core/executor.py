@@ -343,6 +343,37 @@ class SliceCache:
         return self.hits / total if total else 0.0
 
 
+def run_box_serial(items: List, *,
+                   fetch: Callable[[object], Tuple[object, int]],
+                   build: Callable[[object], object],
+                   work: Callable[[object], object],
+                   prefetch_depth: int = 2,
+                   cancel: Optional[threading.Event] = None) -> List:
+    """The ``workers=1`` oracle drain: one ``Prefetcher`` pipeline (fetch
+    + build of the next item overlap the current item's ``work``), items
+    strictly in list order, per-item results in list order (``None`` for
+    skipped items). This is the serial counterpart of ``run_box_queue``
+    and the reference every ledger contract in the repo is pinned against
+    — the generic ``QueryEngine`` delegates its serial path here, and
+    ``parallel.fabric`` re-runs any shard's restricted plan through it to
+    reproduce the shard's device ledger byte for byte. ``cancel`` aborts
+    with ``BoxQueueCancelled`` exactly like the pooled scheduler."""
+    results: List = [None] * len(items)
+    pf = Prefetcher((build(fetch(it)[0]) for it in items),
+                    depth=max(1, int(prefetch_depth)))
+    try:
+        for i, built in enumerate(pf):
+            if cancel is not None and cancel.is_set():
+                raise BoxQueueCancelled(
+                    "query cancelled before draining its boxes")
+            if built is None:
+                continue
+            results[i] = work(built)
+    finally:
+        pf.close()
+    return results
+
+
 def run_box_queue(items: List, *, order: List[int],
                   est_words: Callable[[object], int],
                   fetch: Callable[[object], Tuple[object, int]],

@@ -310,10 +310,142 @@ def box_queue_order(costs: Sequence[float],
     plan order, and because fetches are serialized in queue order this
     keeps the device's LRU frame hits and the cache's hit/miss *sequence*
     identical to the ``workers=1`` oracle (the determinism contract the
-    property tests pin)."""
+    property tests pin).
+
+    The plan-order fallback applies *whenever* a ledger is attached — even
+    for a ``workers=1`` caller, where LPT would be equally safe (a serial
+    drain IS the oracle in any order). That is deliberate, not an
+    oversight: the drain order must be a function of the engine's
+    configuration alone, never of its worker count, so a query's measured
+    I/O ledger is reproducible across ``workers`` settings and a shard of
+    a distributed run (``parallel.fabric``) can be re-executed solo at any
+    worker count and land on byte-identical ledgers.
+    ``tests/test_sharding.py`` pins both branches as a regression
+    contract."""
     if ledger_sensitive:
         return list(range(len(costs)))
     return lpt_order(costs)
+
+
+# ---------------------------------------------------------------------------
+# interval bookkeeping (§5 slice dedup) — shared by the QueryEngine's
+# per-box fetch walk and the fabric's rank-r byte-range shipping planner
+# ---------------------------------------------------------------------------
+
+def merge_interval(covered: List[Tuple[int, int]], lo: int,
+                   hi: int) -> List[Tuple[int, int]]:
+    """Insert the inclusive interval [lo, hi] into a sorted disjoint
+    interval list, coalescing adjacent/overlapping entries."""
+    out: List[Tuple[int, int]] = []
+    placed = False
+    for a, b in covered:
+        if b + 1 < lo:
+            out.append((a, b))
+        elif hi + 1 < a:
+            if not placed:
+                out.append((lo, hi))
+                placed = True
+            out.append((a, b))
+        else:
+            lo, hi = min(lo, a), max(hi, b)
+    if not placed:
+        out.append((lo, hi))
+    return sorted(out)
+
+
+def interval_gaps(covered: List[Tuple[int, int]], lo: int,
+                  hi: int) -> List[Tuple[int, int]]:
+    """Sub-intervals of [lo, hi] not covered yet, ascending."""
+    gaps = []
+    cur = lo
+    for a, b in covered:
+        if b < cur:
+            continue
+        if a > hi:
+            break
+        if a > cur:
+            gaps.append((cur, a - 1))
+        cur = max(cur, b + 1)
+        if cur > hi:
+            break
+    if cur <= hi:
+        gaps.append((cur, hi))
+    return gaps
+
+
+def box_mass_costs_nd(boxes: Sequence[Tuple[Tuple[int, int], ...]],
+                      dim_keys: Sequence[Tuple[int, Sequence[str]]],
+                      indptr_by_key: Dict[str, np.ndarray]) -> List[int]:
+    """Rank-r generalization of ``box_mass_costs``: per-box slice mass in
+    raw CSR words for n-dimensional ``QueryPlan`` boxes, from the resident
+    degree indexes alone.
+
+    ``dim_keys`` lists, per *owned* dimension, the distinct relation keys
+    whose rows that dimension provisions (``QueryEngine.owned_dim_keys()``
+    hands exactly this); ``indptr_by_key`` maps each key to its resident
+    (V+1)-word prefix sums. Per box, each key's row intervals are walked
+    dimension by dimension with the same §5 interval dedup the engine's
+    ``_fetch_box`` / ``_est_box_words`` use, so the cost of a box equals
+    the raw words its fetch will actually read — the LPT input of
+    ``balanced_box_schedule`` and the shipping mass of
+    ``shard_shipped_ranges``. On the triangle plan this reproduces
+    ``box_mass_costs`` row for row (minus the one-relation special-casing),
+    which ``tests/test_sharding.py`` pins."""
+    costs: List[int] = []
+    ips = {k: np.asarray(ip, dtype=np.int64) for k, ip in
+           indptr_by_key.items()}
+    for box in boxes:
+        covered: Dict[str, List[Tuple[int, int]]] = {}
+        words = 0
+        for d, keys in dim_keys:
+            lo, hi = box[d]
+            for key in keys:
+                ip = ips[key]
+                lo_, hi_ = max(int(lo), 0), min(int(hi), len(ip) - 2)
+                if hi_ < lo_:
+                    continue
+                for glo, ghi in interval_gaps(covered.get(key, []),
+                                              lo_, hi_):
+                    words += int(ip[ghi + 1] - ip[glo])
+                covered[key] = merge_interval(covered.get(key, []),
+                                              lo_, hi_)
+        costs.append(words)
+    return costs
+
+
+def shard_shipped_ranges(boxes: Sequence[Tuple[Tuple[int, int], ...]],
+                         schedule: Sequence[Sequence[int]],
+                         dim_keys: Sequence[Tuple[int, Sequence[str]]],
+                         nv_by_key: Dict[str, int]
+                         ) -> List[Dict[str, List[Tuple[int, int]]]]:
+    """Per-shard byte-range shipping plan: the rank-r generalization of
+    ``shard_local_slices`` at the CSR row-interval layer.
+
+    For every shard in ``schedule`` (lists of box ids) and every relation
+    key, returns the sorted disjoint list of vertex-row intervals that
+    shard's boxes touch through their owned dimensions — exactly the rows
+    whose neighbor bytes a ``fabric.ShippedEdgeSource`` must hold for the
+    shard to execute its boxes without reaching back to the origin store.
+    Nothing is replicated: a row outside every assigned box's owned ranges
+    appears in no interval. The union over shards covers every row some
+    box touches (shards may overlap where their boxes share rows — slices
+    are read-only)."""
+    out: List[Dict[str, List[Tuple[int, int]]]] = []
+    for box_ids in schedule:
+        ranges: Dict[str, List[Tuple[int, int]]] = {}
+        for b in box_ids:
+            box = boxes[b]
+            for d, keys in dim_keys:
+                lo, hi = box[d]
+                for key in keys:
+                    nv = int(nv_by_key[key])
+                    lo_, hi_ = max(int(lo), 0), min(int(hi), nv - 1)
+                    if hi_ < lo_:
+                        continue
+                    ranges[key] = merge_interval(ranges.get(key, []),
+                                                 lo_, hi_)
+        out.append(ranges)
+    return out
 
 
 def box_mass_costs(indptr: np.ndarray,

@@ -54,14 +54,14 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.executor import (SliceCache, _pow2, merge_queue_telemetry,
-                                 run_box_queue)
+                                 run_box_queue, run_box_serial)
 from repro.core.iomodel import BlockDevice
 from repro.core.leapfrog import Atom
 from repro.core.lftj_jax import csr_from_edges, orient_edges
 from repro.core.queries import Query, is_consistent, validate
 from repro.data.edgestore import EdgeStore, InMemoryEdgeSource
-from repro.data.pipeline import Prefetcher
-from repro.parallel.sharding import box_queue_order
+from repro.parallel.sharding import (box_queue_order, interval_gaps,
+                                     merge_interval)
 
 from repro.kernels import ledger as kernel_ledger
 
@@ -142,44 +142,10 @@ class _AtomMeta:
     #                                    -1: reversed index of one, 0: unknown
 
 
-def _merge_interval(covered: List[Tuple[int, int]], lo: int,
-                    hi: int) -> List[Tuple[int, int]]:
-    """Insert [lo, hi] into a sorted disjoint interval list."""
-    out: List[Tuple[int, int]] = []
-    placed = False
-    for a, b in covered:
-        if b + 1 < lo:
-            out.append((a, b))
-        elif hi + 1 < a:
-            if not placed:
-                out.append((lo, hi))
-                placed = True
-            out.append((a, b))
-        else:
-            lo, hi = min(lo, a), max(hi, b)
-    if not placed:
-        out.append((lo, hi))
-    return sorted(out)
-
-
-def _gaps(covered: List[Tuple[int, int]], lo: int,
-          hi: int) -> List[Tuple[int, int]]:
-    """Sub-intervals of [lo, hi] not covered yet, ascending."""
-    gaps = []
-    cur = lo
-    for a, b in covered:
-        if b < cur:
-            continue
-        if a > hi:
-            break
-        if a > cur:
-            gaps.append((cur, a - 1))
-        cur = max(cur, b + 1)
-        if cur > hi:
-            break
-    if cur <= hi:
-        gaps.append((cur, hi))
-    return gaps
+# §5 interval bookkeeping now lives in ``parallel.sharding`` (the fabric's
+# shipping planner shares it); the old private names remain as aliases.
+_merge_interval = merge_interval
+_gaps = interval_gaps
 
 
 def _extract_rows(slabs: List[Tuple[int, int, np.ndarray, np.ndarray]],
@@ -355,6 +321,23 @@ class QueryEngine:
                 # too — the ledger stays symmetric with reversed indexes
                 raw[name] = InMemoryEdgeSource(ip, ix, orientation="raw",
                                                device=device)
+        # pre-seeded reversed indexes: a relations entry "<rel>~rev"
+        # supplies the reordered index of an order-inconsistent atom
+        # directly, skipping ``_reversed_source`` — the distributed fabric
+        # ships shard-local reversed slices this way instead of deriving
+        # them from a (partial) forward slice
+        for name, src in relations.items():
+            if not name.endswith("~rev") or name in raw:
+                continue
+            if name[:-len("~rev")] not in rel_names:
+                raise ValueError(
+                    f"reversed-index source {name!r} matches no relation "
+                    f"of this query ({rel_names})")
+            if not hasattr(src, "read_rows"):
+                raise ValueError(
+                    f"reversed-index source {name!r}: unsupported source "
+                    f"{type(src)} (needs the EdgeSource interface)")
+            raw[name] = src
         self._any_store = any_store
 
         # -- resolve the variable order and per-atom metadata -------------
@@ -748,34 +731,75 @@ class QueryEngine:
             merge_queue_telemetry(self.stats, tele, self._stats_lock,
                                   inflight_boxes=self.inflight_boxes)
             return results
-        results: List = [None] * len(boxes)
-        pf = Prefetcher(
-            (self._build_box(self._fetch_box(b)[0]) for b in boxes),
-            depth=self.prefetch_depth)
-        try:
-            for i, built in enumerate(pf):
-                if self.cancel is not None and self.cancel.is_set():
-                    from repro.core.executor import BoxQueueCancelled
-                    raise BoxQueueCancelled(
-                        "query cancelled before draining its boxes")
-                if built is None:
-                    continue
-                results[i] = work(built)
-        finally:
-            pf.close()
+        return run_box_serial(boxes, fetch=self._fetch_box,
+                              build=self._build_box, work=work,
+                              prefetch_depth=self.prefetch_depth,
+                              cancel=self.cancel)
+
+    # -- fabric hooks -----------------------------------------------------------
+    # ``repro.parallel.fabric`` plans once on a full-source engine, ships
+    # each shard only the byte ranges its boxes touch, and re-runs a
+    # restricted plan per shard; these accessors expose exactly the plan
+    # inputs that shipping needs (relation keys incl. reversed indexes,
+    # which dimension provisions which key) without reaching into privates.
+
+    def source_keys(self) -> List[str]:
+        """Relation source keys actually read by this engine's atoms, in
+        registration order — forward relation names plus any derived
+        ``"<rel>~rev"`` reversed indexes."""
+        return list(self._sources)
+
+    def source_for(self, key: str):
+        """The (possibly cache-wrapped) EdgeSource behind ``key``; the
+        unwrapped source is at ``.source`` when a cache is attached."""
+        return self._sources[key]
+
+    def owned_dim_keys(self) -> List[Tuple[int, List[str]]]:
+        """Per owned dimension, the distinct relation keys whose rows it
+        provisions — the ``dim_keys`` input of the fabric's
+        ``sharding.box_mass_costs_nd`` / ``shard_shipped_ranges``."""
+        return [(d, self._dim_keys(self._owned[d]))
+                for d in range(self.n) if self._owned[d]]
+
+    def run_boxes(self, mode: str = "count",
+                  capacity: Optional[int] = None) -> List:
+        """Execute the plan and return PER-BOX results in plan order
+        (``None`` for empty/skipped boxes) instead of the reduced total:
+        counts for ``mode='count'``, raw binding rows (variable-order
+        columns, unprojected) for ``mode='list'``.
+
+        This is the fabric's shard entry point — the cross-shard reduction
+        happens at the caller in global fixed box order, which is what
+        keeps a distributed run's count/listing byte-identical to the
+        single-host ``count()`` / ``list()`` (both of which are thin
+        reductions over this method). Stats and the I/O mark/collect
+        window behave exactly as in ``count()``/``list()``."""
+        plan = self.plan()
+        self._reset_stats(plan)
+        if mode == "count":
+            work = self._work_count
+        elif mode == "list":
+            cap0 = capacity if capacity is not None \
+                else self.default_list_capacity()
+            work = lambda built: self._work_list(built, cap0)  # noqa: E731
+        else:
+            raise ValueError(f"mode {mode!r} not in ('count', 'list')")
+        mark = self._io_mark()
+        results = self._run(plan.boxes, work)
+        self._io_collect(mark)
+        if mode == "count":
+            self.stats.n_results = sum(int(r) for r in results
+                                       if r is not None)
+        else:
+            self.stats.n_results = sum(len(r) for r in results
+                                       if r is not None)
         return results
 
     # -- public entry points ----------------------------------------------------
 
     def count(self) -> int:
-        plan = self.plan()
-        self._reset_stats(plan)
-        mark = self._io_mark()
-        results = self._run(plan.boxes, self._work_count)
-        self._io_collect(mark)
-        total = sum(r for r in results if r is not None)
-        self.stats.n_results = total
-        return total
+        self.run_boxes("count")
+        return self.stats.n_results
 
     def list(self, capacity: Optional[int] = None) -> np.ndarray:
         """All result bindings as an (m, len(head)) int64 array, columns in
@@ -787,18 +811,10 @@ class QueryEngine:
         exact count exceeds the buffer rescans at doubled capacity
         (``stats.n_rescans``), so results stay complete and deterministic
         while peak result memory respects the budget."""
-        plan = self.plan()
-        self._reset_stats(plan)
-        cap0 = capacity if capacity is not None \
-            else self.default_list_capacity()
-        mark = self._io_mark()
-        results = self._run(plan.boxes,
-                            lambda built: self._work_list(built, cap0))
-        self._io_collect(mark)
+        results = self.run_boxes("list", capacity)
         parts = [r for r in results if r is not None]
         rows = np.concatenate(parts) if parts \
             else np.zeros((0, self.n), dtype=np.int64)
-        self.stats.n_results = len(rows)
         return self.head_columns(rows)
 
 

@@ -54,6 +54,7 @@ from repro.core.iomodel import BlockDevice
 from repro.core.lftj_jax import csr_from_edges, orient_edges
 from repro.core.queries import Query, validate
 from repro.data.edgestore import EdgeStore, InMemoryEdgeSource
+from repro.parallel.fabric import Fabric, FabricStats
 from repro.query.executor import QueryEngine, QueryStats
 from repro.query.patterns import PATTERNS
 from repro.runtime.straggler import BoxScheduler
@@ -671,6 +672,60 @@ class Server:
         out = eng.count() if mode == "count" else eng.list(capacity)
         return out, eng.stats
 
+    # -- fabric-backed sessions ------------------------------------------------
+
+    def fabric_run(self, query, mode: str = "count", *,
+                   n_shards: Optional[int] = None,
+                   want_words: Optional[int] = None,
+                   workers: Optional[int] = None,
+                   capacity: Optional[int] = None,
+                   block: bool = True,
+                   timeout: Optional[float] = None
+                   ) -> Tuple[object, FabricStats]:
+        """One query through the distributed box fabric
+        (``parallel.fabric``) over this server's warm relations.
+
+        Admission reserves ``want_words`` exactly like ``submit`` — the
+        reservation is the PER-SHARD working budget (each shard models a
+        remote host's local memory) and bounds the planning/shipping
+        footprint on this server; shipping reads are charged to the
+        server's shared device under a per-run attribution tag, while
+        every shard executes against its own fresh device (the per-shard
+        ledgers in the returned ``FabricStats`` keep the solo-oracle
+        contract). Blocking call; returns ``(result, FabricStats)``."""
+        if self._closed:
+            raise QueryError("server is closed")
+        if mode not in ("count", "list"):
+            raise ValueError(f"mode {mode!r} not in ('count', 'list')")
+        query = self._resolve_query(query)
+        missing = [a.rel for a in query.atoms if a.rel not in self._sources]
+        if missing:
+            raise ValueError(f"unknown relation(s) {sorted(set(missing))}; "
+                             f"serving {sorted(self._sources)}")
+        order = self._order_for(query)
+        tag = f"fab{next(self._qid)}"
+        reservation = self.admission.acquire(
+            want_words, timeout=timeout, block=block, tag=tag)
+        self.device.open_tag(tag, max(2, reservation.words // self.device.B))
+        try:
+            fab = Fabric(query, relations=dict(self._sources), order=order,
+                         n_shards=n_shards, mem_words=reservation.words,
+                         cache_words=self.floor_words,
+                         io_block_words=self.device.B,
+                         backend=self.backend,
+                         workers=self.workers_per_query
+                         if workers is None else max(1, int(workers)),
+                         skew=self.skew,
+                         heavy_threshold=self.heavy_threshold,
+                         device=self.device,
+                         use_pallas_kernels=self._use_pallas)
+            with self.device.attributed(tag):
+                out = fab.count() if mode == "count" else fab.list(capacity)
+            return out, fab.stats
+        finally:
+            self.device.close_tag(tag)
+            reservation.release()
+
     # -- lifecycle -------------------------------------------------------------
 
     def handles(self) -> List[QueryHandle]:
@@ -716,6 +771,18 @@ class Session:
 
     def list(self, query, **kw) -> np.ndarray:
         return self.submit(query, "list", **kw).result()
+
+    def fabric_count(self, query, **kw) -> int:
+        """Distributed count through the server's box fabric
+        (``Server.fabric_run``); session defaults apply."""
+        merged = dict(self.defaults)
+        merged.update(kw)
+        return self.server.fabric_run(query, "count", **merged)[0]
+
+    def fabric_list(self, query, **kw) -> np.ndarray:
+        merged = dict(self.defaults)
+        merged.update(kw)
+        return self.server.fabric_run(query, "list", **merged)[0]
 
     def close(self) -> None:
         for h in self._live:

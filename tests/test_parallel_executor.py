@@ -23,6 +23,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from conftest import ThreadGuard
 from repro.core import StreamingExecutor, TriangleEngine, TrieArray, \
     lftj_triangle_count, orient_edges
 from repro.core.lftj_jax import csr_from_edges
@@ -227,16 +228,12 @@ class TestWorkerFaults:
                 raise RuntimeError("backend exploded")
             return "host"
 
-        base = threading.active_count()
+        guard = ThreadGuard()
         ex = StreamingExecutor(source, pick_backend=bad_backend,
                                workers=ENV_WORKERS)
         with pytest.raises(RuntimeError, match="backend exploded"):
             ex.run_count(boxes)
-        deadline = time.monotonic() + 5
-        while threading.active_count() > base \
-                and time.monotonic() < deadline:
-            time.sleep(0.01)
-        assert threading.active_count() == base      # no leaked workers
+        guard.assert_clean(timeout=5)                # no leaked workers
         assert len(calls) < len(boxes)               # remaining cancelled
 
     def test_source_read_exception_propagates(self):
@@ -252,16 +249,12 @@ class TestWorkerFaults:
                 return super().read_rows(lo, hi)
 
         flaky = FlakySource(source.indptr, source.indices)
-        base = threading.active_count()
+        guard = ThreadGuard()
         ex = StreamingExecutor(flaky, pick_backend=lambda *a: "host",
                                workers=ENV_WORKERS)
         with pytest.raises(OSError, match="disk on fire"):
             ex.run_count(boxes)
-        deadline = time.monotonic() + 5
-        while threading.active_count() > base \
-                and time.monotonic() < deadline:
-            time.sleep(0.01)
-        assert threading.active_count() == base
+        guard.assert_clean(timeout=5)
 
     def test_listing_exception_propagates(self):
         boxes, source = self._boxes_and_source()

@@ -61,11 +61,10 @@ def serve_server(graph=GRAPH, **kw):
     return Server.from_graph(src, dst, **kw)
 
 
-def assert_no_thread_leak(base: int) -> None:
-    deadline = time.monotonic() + 10
-    while threading.active_count() > base and time.monotonic() < deadline:
-        time.sleep(0.01)
-    assert threading.active_count() == base
+# identity-based leak detection (shared with the fabric suite): a count
+# delta flakes under -p no:randomly reordering when an unrelated earlier
+# test's worker dies mid-test; tracking thread idents does not
+from conftest import ThreadGuard
 
 
 # ---------------------------------------------------------------------------
@@ -124,7 +123,7 @@ class TestConcurrencyStress:
            workers=st.sampled_from([1, ENV_WORKERS]),
            cache_on=st.booleans())
     def test_random_mix_from_threads(self, mix, workers, cache_on):
-        base = threading.active_count()
+        guard = ThreadGuard()
         srv = serve_server(graph=SMALL, mem_words=1 << 15,
                            cache_words=(1 << 15) if cache_on else 0,
                            workers_per_query=workers, max_active=4,
@@ -175,7 +174,7 @@ class TestConcurrencyStress:
             assert srv.admission.peak_reserved <= srv.mem_words
         finally:
             srv.close()
-        assert_no_thread_leak(base)
+        guard.assert_clean()
 
 
 # ---------------------------------------------------------------------------
@@ -323,7 +322,7 @@ class TestServerAdmission:
 
 class TestCancellation:
     def test_cancel_mid_query_leaves_server_serving(self):
-        base = threading.active_count()
+        guard = ThreadGuard()
         srv = serve_server(mem_words=1 << 13, max_active=4,
                           workers_per_query=ENV_WORKERS)
         try:
@@ -354,17 +353,17 @@ class TestCancellation:
             assert srv.submit("triangle").result(300) == oracle("triangle")
         finally:
             srv.close()
-        assert_no_thread_leak(base)
+        guard.assert_clean()
 
     def test_close_cancels_everything_without_leaks(self):
-        base = threading.active_count()
+        guard = ThreadGuard()
         srv = serve_server(mem_words=1 << 13, max_active=8)
         srv.fault_hook = lambda stage, qid, i: time.sleep(0.01)
         handles = [srv.submit("four_clique") for _ in range(3)]
         srv.close()
         for h in handles:
             assert h.done()
-        assert_no_thread_leak(base)
+        guard.assert_clean()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,282 @@
+"""Model-based tests for the box-sharding layer (``parallel.sharding``):
+interval bookkeeping, box cost pricing, LPT scheduling, the queue-order
+regression contract, and the two slice-shipping planners (the triangle
+engine's renumbered local slices and the fabric's rank-r byte ranges).
+
+Everything is pinned against tiny brute-force models — a cost is "the
+words a fetch reads" computed by literally enumerating rows; a schedule
+is "an exact partition"; a shipped range list is "sorted, disjoint, and
+covering exactly the rows some assigned box touches".
+"""
+
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lftj_jax import SENTINEL, csr_from_edges, orient_edges
+from repro.data.graphs import random_graph
+from repro.parallel.sharding import (balanced_box_schedule, box_mass_costs,
+                                     box_mass_costs_nd, box_queue_order,
+                                     interval_gaps, lpt_order,
+                                     merge_interval, shard_local_slices,
+                                     shard_shipped_ranges)
+from repro.query.executor import QueryEngine
+from repro.query.patterns import PATTERNS
+
+
+def small_csr(seed=0, nv=48, ne=160):
+    src, dst = random_graph(nv, ne, seed=seed)
+    a, b = orient_edges(src, dst)
+    n = int(max(a.max(initial=-1), b.max(initial=-1))) + 1
+    ip, _ix = csr_from_edges(a, b, n_nodes=n)
+    return np.asarray(ip, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# interval bookkeeping
+# ---------------------------------------------------------------------------
+
+class TestIntervals:
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 60), st.integers(0, 60)),
+                    max_size=8),
+           st.integers(0, 60), st.integers(0, 60))
+    def test_merge_and_gaps_match_set_model(self, raw, qlo, qhi):
+        covered = []
+        model = set()
+        for a, b in raw:
+            lo, hi = min(a, b), max(a, b)
+            covered = merge_interval(covered, lo, hi)
+            model |= set(range(lo, hi + 1))
+        # merged list is sorted, disjoint, non-adjacent, and == the model
+        for (a, b), (c, d) in zip(covered, covered[1:]):
+            assert b + 1 < c
+        got = set()
+        for a, b in covered:
+            assert a <= b
+            got |= set(range(a, b + 1))
+        assert got == model
+        # gaps of [qlo, qhi] are exactly the uncovered points in it
+        qlo, qhi = min(qlo, qhi), max(qlo, qhi)
+        gap_pts = set()
+        for a, b in interval_gaps(covered, qlo, qhi):
+            assert qlo <= a <= b <= qhi
+            gap_pts |= set(range(a, b + 1))
+        assert gap_pts == set(range(qlo, qhi + 1)) - model
+
+
+# ---------------------------------------------------------------------------
+# box cost pricing
+# ---------------------------------------------------------------------------
+
+class TestBoxMassCosts:
+    def _brute(self, ip, box):
+        """Literal words-read model: x-slab rows plus y-range rows, each
+        distinct row counted once."""
+        lx, hx, ly, hy = box
+        nv = len(ip) - 1
+        rows = set(range(max(0, lx), min(hx, nv - 1) + 1)) \
+            | set(range(max(0, ly), min(hy, nv - 1) + 1))
+        return sum(int(ip[r + 1] - ip[r]) for r in rows)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10_000),
+           st.lists(st.tuples(st.integers(0, 47), st.integers(0, 47),
+                              st.integers(0, 47), st.integers(0, 47)),
+                    min_size=1, max_size=6))
+    def test_matches_brute_force(self, seed, raw):
+        ip = small_csr(seed % 97)
+        boxes = [(min(a, b), max(a, b), min(c, d), max(c, d))
+                 for a, b, c, d in raw]
+        got = box_mass_costs(ip, boxes)
+        assert got == [self._brute(ip, box) for box in boxes]
+
+    def test_monotone_in_box_growth(self):
+        """Growing a box never lowers its mass (the LPT input must be a
+        monotone size proxy or balancing is meaningless)."""
+        ip = small_csr(3)
+        nv = len(ip) - 1
+        for lx, hx, ly, hy in [(0, 10, 0, 10), (5, 20, 2, 8),
+                               (0, nv - 1, 0, 0)]:
+            base = box_mass_costs(ip, [(lx, hx, ly, hy)])[0]
+            for grown in [(lx, min(hx + 5, nv - 1), ly, hy),
+                          (max(0, lx - 3), hx, ly, hy),
+                          (lx, hx, ly, min(hy + 7, nv - 1)),
+                          (lx, hx, max(0, ly - 2), hy)]:
+                assert box_mass_costs(ip, [grown])[0] >= base
+
+    @pytest.mark.parametrize("pattern", ["triangle", "diamond", "path3"])
+    def test_nd_costs_equal_engine_fetch_estimate(self, pattern):
+        """``box_mass_costs_nd`` prices a plan box at exactly the raw
+        words the engine's fetch will read (``_est_box_words``) — the
+        fabric schedules on true fetch mass, for every rank."""
+        src, dst = random_graph(96, 400, seed=11)
+        eng = QueryEngine.from_graph(PATTERNS[pattern](), src, dst,
+                                     mem_words=1 << 11)
+        plan = eng.plan()
+        dim_keys = eng.owned_dim_keys()
+        ips = {}
+        for _d, keys in dim_keys:
+            for k in keys:
+                ips[k] = np.asarray(eng.source_for(k).indptr)
+        got = box_mass_costs_nd(plan.boxes, dim_keys, ips)
+        assert got == [eng._est_box_words(box) for box in plan.boxes]
+
+    def test_nd_reproduces_triangle_costs(self):
+        """On a single-relation rank-2 plan the n-d pricing degrades to
+        the triangle ``box_mass_costs`` row for row."""
+        src, dst = random_graph(96, 400, seed=5)
+        eng = QueryEngine.from_graph(PATTERNS["triangle"](), src, dst,
+                                     mem_words=1 << 11)
+        plan = eng.plan()
+        key = eng.source_keys()[0]
+        ip = np.asarray(eng.source_for(key).indptr)
+        flat = [(b[0][0], b[0][1], b[1][0], b[1][1]) for b in plan.boxes]
+        assert box_mass_costs_nd(plan.boxes, eng.owned_dim_keys(),
+                                 {key: ip}) == box_mass_costs(ip, flat)
+
+
+# ---------------------------------------------------------------------------
+# queue order + schedule
+# ---------------------------------------------------------------------------
+
+class TestScheduling:
+    def test_box_queue_order_regression(self):
+        """Regression contract (PR 9): with a ledger attached the drain
+        order is PLAN order — even for a workers=1 caller, where LPT would
+        be equally safe — so measured I/O is a function of configuration
+        alone and a fabric shard replays byte-identically at any worker
+        count. Without a ledger it is LPT."""
+        costs = [3.0, 9.0, 1.0, 9.0, 4.0]
+        assert box_queue_order(costs, ledger_sensitive=True) == \
+            list(range(len(costs)))
+        assert box_queue_order(costs, ledger_sensitive=False) == \
+            lpt_order(costs)
+        assert lpt_order(costs) == [1, 3, 4, 0, 2]  # ties by index
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(0, 1000), min_size=1, max_size=40),
+           st.integers(1, 8))
+    def test_balanced_schedule_is_exact_partition(self, costs, n_shards):
+        sched = balanced_box_schedule(costs, n_shards)
+        assert len(sched) == n_shards
+        flat = [b for s in sched for b in s]
+        assert sorted(flat) == list(range(len(costs)))
+        # greedy LPT: no shard exceeds mean + max cost (the 4/3-OPT
+        # argument's slack term)
+        loads = [sum(costs[b] for b in s) for s in sched]
+        if costs:
+            assert max(loads) <= sum(costs) / n_shards + max(costs)
+
+
+# ---------------------------------------------------------------------------
+# shipping planners
+# ---------------------------------------------------------------------------
+
+class TestShardShippedRanges:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(1, 6))
+    def test_ranges_cover_exactly_the_touched_rows(self, seed, n_shards):
+        src, dst = random_graph(96, 400, seed=seed % 97)
+        eng = QueryEngine.from_graph(PATTERNS["diamond"](), src, dst,
+                                     mem_words=1 << 10)
+        plan = eng.plan()
+        dim_keys = eng.owned_dim_keys()
+        nv = {k: eng.source_for(k).n_nodes
+              for _d, keys in dim_keys for k in keys}
+        costs = box_mass_costs_nd(
+            plan.boxes, dim_keys,
+            {k: np.asarray(eng.source_for(k).indptr) for k in nv})
+        sched = balanced_box_schedule(costs, n_shards)
+        shipped = shard_shipped_ranges(plan.boxes, sched, dim_keys, nv)
+        assert len(shipped) == n_shards
+
+        def touched(box_ids):
+            rows = {k: set() for k in nv}
+            for b in box_ids:
+                for d, keys in dim_keys:
+                    lo, hi = plan.boxes[b][d]
+                    for k in keys:
+                        lo_, hi_ = max(int(lo), 0), min(int(hi), nv[k] - 1)
+                        rows[k] |= set(range(lo_, hi_ + 1))
+            return rows
+
+        union = {k: set() for k in nv}
+        for box_ids, ranges in zip(sched, shipped):
+            model = touched(box_ids)
+            for k in nv:
+                ivals = ranges.get(k, [])
+                # sorted, disjoint, non-adjacent
+                for (a, b), (c, d) in zip(ivals, ivals[1:]):
+                    assert b + 1 < c
+                got = set()
+                for a, b in ivals:
+                    got |= set(range(a, b + 1))
+                # nothing replicated: exactly the touched rows, no more
+                assert got == model[k]
+                union[k] |= got
+        # the union over shards covers every row any box touches
+        assert union == touched(range(len(plan.boxes)))
+
+
+class TestShardLocalSlices:
+    def _edges_and_gather(self, seed=2):
+        src, dst = random_graph(48, 180, seed=seed)
+        a, b = orient_edges(src, dst)
+        n = int(max(a.max(initial=-1), b.max(initial=-1))) + 1
+        ip, ix = csr_from_edges(a, b, n_nodes=n)
+        ip, ix = np.asarray(ip, np.int64), np.asarray(ix, np.int64)
+        edge_lists = []
+        for lo in range(0, n, 12):
+            hi = min(lo + 11, n - 1)
+            mask = (a >= lo) & (a <= hi)
+            edge_lists.append((a[mask].astype(np.int64),
+                               b[mask].astype(np.int64)))
+
+        def gather(rows):
+            deg = np.diff(ip)[rows] if len(rows) else np.zeros(0, np.int64)
+            vals = np.concatenate([ix[ip[r]:ip[r + 1]] for r in rows]) \
+                if len(rows) else np.zeros(0, np.int64)
+            return deg, vals
+
+        return edge_lists, ip, ix, gather
+
+    @pytest.mark.parametrize("pad_multiple", [1, 8])
+    def test_local_slices_renumber_and_cover(self, pad_multiple):
+        edge_lists, ip, ix, gather = self._edges_and_gather()
+        sched = balanced_box_schedule(
+            [len(eu) for eu, _ in edge_lists], 3)
+        eu_s, ev_s, ok_s, npad_s, rows_s = shard_local_slices(
+            edge_lists, sched, gather, pad_multiple=pad_multiple)
+        assert eu_s.shape == ev_s.shape == ok_s.shape
+        assert eu_s.shape[1] % pad_multiple == 0
+        for s, boxes in enumerate(sched):
+            want_eu = np.concatenate(
+                [edge_lists[b][0] for b in boxes]) if boxes else \
+                np.zeros(0, np.int64)
+            want_ev = np.concatenate(
+                [edge_lists[b][1] for b in boxes]) if boxes else \
+                np.zeros(0, np.int64)
+            n_valid = int(ok_s[s].sum())
+            assert n_valid == len(want_eu)
+            rows = rows_s[s]
+            # valid slots decode (via the shard's row map) to the exact
+            # global edges; pad slots reference the all-SENTINEL pad row
+            np.testing.assert_array_equal(rows[eu_s[s, :n_valid]], want_eu)
+            np.testing.assert_array_equal(rows[ev_s[s, :n_valid]], want_ev)
+            pad_row = int((rows >= 0).sum())
+            assert (eu_s[s, n_valid:] == pad_row).all()
+            assert (npad_s[s, pad_row] == SENTINEL).all()
+            # each referenced row's local neighbor list is the global one
+            for local, g in enumerate(rows):
+                if g < 0:
+                    break
+                d = int(ip[g + 1] - ip[g])
+                np.testing.assert_array_equal(npad_s[s, local, :d],
+                                              ix[ip[g]:ip[g + 1]])
+                assert (npad_s[s, local, d:] == SENTINEL).all()
+            # nothing replicated: only rows its boxes reference appear
+            referenced = set(want_eu) | set(want_ev)
+            assert set(rows[rows >= 0]) == referenced
