@@ -39,3 +39,9 @@ def emit(name: str, us: float, derived: str = "") -> None:
     _ROWS.append({"name": name, "us_per_call": f"{us:.1f}",
                   "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def fmt_util(u: Optional[float]) -> str:
+    """Render ``worker_utilization``: ``None`` (run too short to measure)
+    prints as ``n/a`` instead of crashing a ``:.2f`` format."""
+    return "n/a" if u is None else f"{u:.2f}"

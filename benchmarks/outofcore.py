@@ -42,7 +42,7 @@ from repro.data.edgestore import EdgeStore, EdgeStoreWriter
 from repro.data.graphs import random_graph, rmat_graph
 from repro.data.pipeline import edge_batches
 
-from .common import emit
+from .common import emit, fmt_util
 
 B = 64
 FRACS = (0.05, 0.10, 0.25)     # >= 3 memory budgets (acceptance)
@@ -127,7 +127,7 @@ def main(fast: bool = False) -> None:
                      f"cached_io={eng_c.stats.block_reads};"
                      f"hit_rate={eng_c.stats.cache_hit_rate:.2f};"
                      f"par_io={eng_p.stats.block_reads};"
-                     f"par_util={eng_p.stats.worker_utilization:.2f}")
+                     f"par_util={fmt_util(eng_p.stats.worker_utilization)}")
 
 
 if __name__ == "__main__":

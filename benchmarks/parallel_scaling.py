@@ -35,7 +35,7 @@ import time
 from repro.core import TriangleEngine
 from repro.data.edgestore import write_edge_store
 
-from .common import emit
+from .common import emit, fmt_util
 
 B = 64
 
@@ -96,7 +96,7 @@ def main(fast: bool = False) -> None:
             s = engines[w].stats
             emit(f"pscale/host/w{w}", best[w] * 1e6,
                  f"speedup={best[1] / best[w]:.2f};count={base_n};"
-                 f"boxes={s.n_boxes};util={s.worker_utilization:.2f};"
+                 f"boxes={s.n_boxes};util={fmt_util(s.worker_utilization)};"
                  f"wait_s={s.queue_wait_s:.2f};"
                  f"overlap_s={s.overlap_s:.2f};backend=host")
 
@@ -116,7 +116,7 @@ def main(fast: bool = False) -> None:
             s = eng.stats
             emit(f"pscale/auto/w{w}", best_d[w] * 1e6,
                  f"speedup={best_d[1] / best_d[w]:.2f};count={base_n};"
-                 f"boxes={s.n_boxes};util={s.worker_utilization:.2f};"
+                 f"boxes={s.n_boxes};util={fmt_util(s.worker_utilization)};"
                  f"wait_s={s.queue_wait_s:.2f};"
                  f"overlap_s={s.overlap_s:.2f};backend=auto")
 

@@ -19,6 +19,12 @@ cheapest suite subset at fast sizes, exercising the engine + I/O model
 (including the mmap edge store) end to end. ``--json PATH`` additionally
 writes the emitted rows as JSON (CI uploads it as a build artifact so the
 perf trajectory is tracked per PR).
+
+``--summary PATH`` writes a consolidated ``bench_summary.json``: one
+record per suite with its name, wall seconds, the gate rows it emitted,
+and a snapshot of the process-wide metrics registry (``repro.obs``) —
+the ``box.*`` queue telemetry every engine run folds into the default
+registry while a suite executes.
 """
 
 from __future__ import annotations
@@ -39,6 +45,10 @@ def main() -> None:
                          "+ serve at --fast sizes")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write emitted rows as a JSON run record")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="write a consolidated per-suite summary (name, "
+                         "wall seconds, gate rows, metrics-registry "
+                         "snapshot) as JSON")
     args = ap.parse_args()
     if args.smoke:
         args.fast = True
@@ -71,13 +81,38 @@ def main() -> None:
         names = list(suites)
     reset_rows()
     timings = {}
+    summary = []
     print("name,us_per_call,derived")
     for n in names:
+        # one fresh default registry per suite: instrumented code the
+        # suite constructs (engines, servers) folds its queue telemetry
+        # into it without any benchmark signature changing
+        reg = None
+        if args.summary:
+            from repro.obs import MetricsRegistry, set_default_registry
+            reg = MetricsRegistry()
+            set_default_registry(reg)
+        rows_before = len(collected_rows())
         t0 = time.time()
         print(f"# --- {n} ---", flush=True)
         suites[n](fast=args.fast)
         timings[n] = time.time() - t0
         print(f"# {n} done in {timings[n]:.1f}s", flush=True)
+        if reg is not None:
+            from repro.obs import set_default_registry
+            set_default_registry(None)
+            summary.append({
+                "name": n,
+                "wall_s": round(timings[n], 3),
+                "rows": collected_rows()[rows_before:],
+                "metrics": reg.snapshot(),
+            })
+    if args.summary:
+        with open(args.summary, "w") as f:
+            json.dump({"suites": summary, "fast": bool(args.fast),
+                       "python": platform.python_version()}, f, indent=2)
+        print(f"# wrote {args.summary} ({len(summary)} suites)",
+              flush=True)
     if args.json:
         record = {
             "suites": names,

@@ -35,7 +35,7 @@ import time
 from repro.core import TriangleEngine
 from repro.data.graphs import rmat_graph
 
-from .common import emit
+from .common import emit, fmt_util
 
 FRACS = (0.05, 0.15)        # memory budgets as fractions of |E| words
 MIN_REDUCTION = 2.0         # acceptance gate: >= 2x padded-words reduction
@@ -75,8 +75,8 @@ def main(fast: bool = False) -> None:
              f"reduction={red:.1f};boxes_uni={st_u.n_boxes};"
              f"boxes_hl={st_h.n_boxes};hub={st_h.n_hub_boxes};"
              f"light={st_h.n_light_boxes};mixed={st_h.n_mixed_boxes};"
-             f"util_w1={st_h.worker_utilization:.2f};"
-             f"util_w4={st_h4.worker_utilization:.2f}")
+             f"util_w1={fmt_util(st_h.worker_utilization)};"
+             f"util_w4={fmt_util(st_h4.worker_utilization)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,162 @@
+#!/usr/bin/env python
+"""CI trace-smoke gate: tracing must observe, never perturb.
+
+Runs the same small served query twice — tracing detached, then with a
+``Tracer`` + ``MetricsRegistry`` attached — and asserts, in order:
+
+1. **Byte-identity.** The traced run returns the identical count and
+   incurs the identical measured ``block_reads`` (the ``BlockDevice``
+   ledger) as the untraced run.
+2. **Span taxonomy.** The trace contains the full acceptance set:
+   admission + planning spans, at least one per-box fetch/compute pair,
+   at least one cache event, and at least one kernel-launch event (the
+   pallas lane runs in interpret mode on CPU).
+3. **Chrome schema.** The exported ``trace_event`` JSON round-trips
+   through ``json``, every record carries ``ph``/``pid``/``tid``/
+   ``name``, begin/end events are balanced, durations are non-negative,
+   and lane metadata (``process_name``) is present.
+4. **Exact sums.** The registry's per-tag ``io.*`` series (including
+   the ``_untagged`` residual) sum to the raw device ledger, and the
+   per-tenant ``cache.*`` series (including ``_shared``) to the raw
+   shared-cache globals.
+
+Writes the validated trace to ``--out`` (CI uploads it as an artifact).
+Exit status is non-zero on any violation. No dependencies beyond the
+repo itself; run as ``PYTHONPATH=src python scripts/trace_smoke.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+REQUIRED_SPANS = ("serve.admission", "serve.query", "query.plan",
+                  "box.fetch", "box.compute")
+IO_FIELDS = ("block_reads", "block_writes", "word_reads", "probes",
+             "cache_served_words")
+CACHE_FIELDS = ("hits", "misses", "hit_words", "miss_words",
+                "passthrough_words")
+
+
+def run_query(tracer=None, metrics=None):
+    """One served triangle count over a small RMAT graph; returns
+    (count, block_reads, server) — the server is closed but its ledgers
+    stay readable."""
+    from repro.data.graphs import rmat_graph
+    from repro.serve import Server
+
+    src, dst = rmat_graph(512, 6000, seed=21)
+    with Server.from_graph(src, dst, mem_words=1 << 15,
+                           backend="pallas", use_pallas_kernels=False,
+                           tracer=tracer, metrics=metrics) as srv:
+        count = srv.submit("triangle", "count").result(timeout=300)
+    return count, int(srv.device.stats.block_reads), srv
+
+
+def check_taxonomy(tracer) -> None:
+    names = tracer.span_names()
+    for span in REQUIRED_SPANS:
+        assert span in names, f"missing span {span!r} (got {names})"
+    events = {e["name"] for e in tracer.snapshot() if e["ph"] == "i"}
+    assert any(n.startswith("cache.") for n in events), \
+        f"no cache event (got {sorted(events)})"
+    assert "kernel.launch" in events, \
+        f"no kernel-launch event (got {sorted(events)})"
+    fetches = sum(1 for e in tracer.snapshot()
+                  if e["ph"] == "B" and e["name"] == "box.fetch")
+    computes = sum(1 for e in tracer.snapshot()
+                   if e["ph"] == "B" and e["name"] == "box.compute")
+    assert fetches >= 1 and computes >= 1, (fetches, computes)
+    print(f"trace-smoke: taxonomy ok "
+          f"({len(names)} span kinds, {len(events)} event kinds, "
+          f"{fetches} fetch / {computes} compute spans)")
+
+
+def check_chrome(doc: dict) -> None:
+    doc = json.loads(json.dumps(doc))           # must round-trip
+    events = doc["traceEvents"]
+    assert events, "empty traceEvents"
+    opens = {}
+    for e in events:
+        for key in ("ph", "pid", "tid", "name"):
+            assert key in e, f"record missing {key!r}: {e}"
+        if e["ph"] == "M":
+            assert e["name"] == "process_name" and "name" in e["args"]
+            continue
+        assert "ts" in e, f"timed record missing ts: {e}"
+        if e["ph"] == "B":
+            opens.setdefault((e["pid"], e["tid"]), []).append(e)
+        elif e["ph"] == "E":
+            stack = opens.get((e["pid"], e["tid"]))
+            assert stack, f"E without open B on ({e['pid']},{e['tid']})"
+            b = stack.pop()
+            assert b["name"] == e["name"], (b["name"], e["name"])
+            assert e["ts"] >= b["ts"], "negative span duration"
+        else:
+            assert e["ph"] == "i", f"unknown phase {e['ph']!r}"
+    dangling = [b["name"] for st in opens.values() for b in st]
+    assert not dangling, f"unclosed spans: {dangling}"
+    lanes = [e["args"]["name"] for e in events if e["ph"] == "M"]
+    assert "main" in lanes, lanes
+    print(f"trace-smoke: chrome schema ok ({len(events)} records, "
+          f"lanes={lanes})")
+
+
+def check_sums(reg, srv) -> None:
+    reg.collect()
+
+    def label_sum(name, label):
+        return sum(v for key, v in reg.series(name).items()
+                   if any(k == label for k, _ in key))
+
+    for f in IO_FIELDS:
+        raw = int(getattr(srv.device.stats, f))
+        got = label_sum(f"io.{f}", "tag")
+        assert got == raw, f"io.{f}: Σtags {got} != ledger {raw}"
+    for rel, cache in srv.caches.items():
+        for f in CACHE_FIELDS:
+            raw = int(getattr(cache, f))
+            got = sum(v for key, v in reg.series(f"cache.{f}").items()
+                      if dict(key).get("relation") == rel
+                      and any(k == "tenant" for k, _ in key))
+            assert got == raw, \
+                f"cache.{f}{{relation={rel}}}: Σtenants {got} != {raw}"
+    print("trace-smoke: registry sums match the raw ledgers exactly")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="trace_smoke.json", metavar="PATH",
+                    help="where to write the validated Chrome trace")
+    args = ap.parse_args()
+
+    from repro.obs import MetricsRegistry, Tracer
+
+    base_count, base_reads, _ = run_query()
+    tracer, reg = Tracer(), MetricsRegistry()
+    count, reads, srv = run_query(tracer=tracer, metrics=reg)
+
+    assert count == base_count, \
+        f"traced count {count} != untraced {base_count}"
+    assert reads == base_reads, \
+        f"traced block_reads {reads} != untraced {base_reads}"
+    print(f"trace-smoke: byte-identity ok "
+          f"(count={count}, block_reads={reads})")
+
+    check_taxonomy(tracer)
+    check_chrome(tracer.to_chrome())
+    check_sums(reg, srv)
+
+    tracer.export_chrome(args.out)
+    print(f"trace-smoke: wrote {args.out} "
+          f"({len(tracer.snapshot())} buffered events, "
+          f"{tracer.dropped} dropped)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -127,7 +127,9 @@ class EngineStats:
     build_s: float = 0.0               # worker-seconds building slices
     compute_s: float = 0.0             # worker-seconds in backends
     overlap_s: float = 0.0             # busy-seconds hidden by overlap
-    worker_utilization: float = 0.0    # busy / (workers * wall)
+    # busy / (workers * wall); None when the run finished too fast to
+    # measure (wall == 0 at perf_counter granularity — never a 0/0)
+    worker_utilization: Optional[float] = None
     max_inflight_boxes: int = 0        # peak resident materialized slices
     max_inflight_words: int = 0        # peak resident raw slice words
     # streaming executor (out-of-core) accounting
@@ -584,13 +586,20 @@ class TriangleEngine:
                  prefetch_depth: int = 2,
                  workers: int = 1,
                  inflight_boxes: Optional[int] = None,
-                 use_pallas_kernels: Optional[bool] = None):
+                 use_pallas_kernels: Optional[bool] = None,
+                 tracer=None,
+                 metrics=None):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
         if skew not in ("uniform", "heavy_light"):
             raise ValueError(
                 f"skew {skew!r} not in ('uniform', 'heavy_light')")
         self.backend = backend
+        # observability: span/event recorder (obs.trace.Tracer) and the
+        # cross-layer MetricsRegistry; None by default — the traced-off
+        # path is a single attribute check per site
+        self.tracer = tracer
+        self.metrics = metrics
         self.degree_bins = degree_bins
         self.skew = skew
         self.heavy_threshold = heavy_threshold
@@ -662,7 +671,8 @@ class TriangleEngine:
         self.cache_words = int(cache_words)
         self._slice_cache: Optional[SliceCache] = None
         if self.cache_words > 0:
-            self._slice_cache = SliceCache(self.source, self.cache_words)
+            self._slice_cache = SliceCache(self.source, self.cache_words,
+                                           tracer=tracer)
             self.source = self._slice_cache
         if self.shard and self.indices is None:
             warnings.warn(
@@ -926,7 +936,9 @@ class TriangleEngine:
                                  degree_bins=self.degree_bins
                                  and self.indices is None,
                                  inflight_boxes=self.inflight_boxes,
-                                 inflight_words=inflight_words)
+                                 inflight_words=inflight_words,
+                                 tracer=self.tracer,
+                                 metrics=self.metrics)
 
     def _reset_stats(self, n_boxes: int) -> None:
         self.stats = EngineStats(dense_threshold=self.dense_threshold,
@@ -966,6 +978,17 @@ class TriangleEngine:
     # -- counting -------------------------------------------------------------
 
     def count(self) -> int:
+        if self.tracer is not None:
+            with self.tracer.span("engine.count", nv=self.nv,
+                                  workers=self.workers):
+                total = self._count_impl()
+        else:
+            total = self._count_impl()
+        if self.metrics is not None:
+            self.metrics.publish_stats(self.stats, "engine", mode="count")
+        return total
+
+    def _count_impl(self) -> int:
         boxes = self.plan()
         self._reset_stats(len(boxes))
         mark = self._io_mark()
@@ -1260,6 +1283,17 @@ class TriangleEngine:
         doubled until everything fits (counting is cheap relative to
         materialization, so a rescan costs one extra pass).
         """
+        if self.tracer is not None:
+            with self.tracer.span("engine.list", nv=self.nv,
+                                  workers=self.workers):
+                tris = self._list_impl(capacity)
+        else:
+            tris = self._list_impl(capacity)
+        if self.metrics is not None:
+            self.metrics.publish_stats(self.stats, "engine", mode="list")
+        return tris
+
+    def _list_impl(self, capacity: Optional[int] = None) -> np.ndarray:
         boxes = self.plan()
         self._reset_stats(len(boxes))
         mark = self._io_mark()

@@ -115,6 +115,14 @@ class BlockDevice:
                 self._tags[tag] = (OrderedDict(), 1, IOStats())
             return self._tags[tag][2]
 
+    def all_tag_stats(self) -> dict:
+        """Every tag partition's ``IOStats`` (closed tags included —
+        ``close_tag`` keeps the ledger readable). The observability
+        registry mirrors this into ``io.*{tag=...}`` series; per-tag
+        counters sum to ``stats`` minus whatever ran unattributed."""
+        with self._lock:
+            return {tag: ent[2] for tag, ent in self._tags.items()}
+
     @contextmanager
     def attributed(self, tag):
         """Attribute this thread's accesses to ``tag`` (nestable; restores

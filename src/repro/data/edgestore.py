@@ -561,6 +561,9 @@ class EdgeStore:
                               offset=off, shape=(total_words,)) \
             if total_words else np.zeros(0, np.int32)
         self.device = None
+        # optional obs.trace.Tracer: every read_rows emits an io.read_rows
+        # instant event (rows + words) when attached; None = no overhead
+        self.tracer = None
         if device is not None:
             self.attach_device(device)
 
@@ -607,6 +610,9 @@ class EdgeStore:
         vals = np.concatenate(parts) if parts \
             else np.zeros(0, np.int32)
         indptr_local = self.indptr[lo:hi + 2] - self.indptr[lo]
+        tr = self.tracer
+        if tr is not None:
+            tr.event("io.read_rows", lo=lo, hi=hi, words=len(vals))
         return indptr_local, vals
 
 
@@ -619,13 +625,15 @@ class InMemoryEdgeSource:
     """
 
     def __init__(self, indptr: np.ndarray, indices: np.ndarray,
-                 device=None, orientation: str = "minmax"):
+                 device=None, orientation: str = "minmax",
+                 tracer=None):
         self.indptr = np.asarray(indptr, dtype=np.int64)
         self.indices = np.asarray(indices, dtype=np.int32)
         self.n_nodes = len(self.indptr) - 1
         self.n_edges = len(self.indices)
         self.orientation = orientation
         self.device = device
+        self.tracer = tracer
         if device is not None and self.n_edges:
             device.register(self.indices)
 
@@ -644,4 +652,7 @@ class InMemoryEdgeSource:
         s, e = int(self.indptr[lo]), int(self.indptr[hi + 1])
         if self.device is not None and e > s:
             self.device.read_range(self.indices, s, e)
+        tr = self.tracer
+        if tr is not None:
+            tr.event("io.read_rows", lo=lo, hi=hi, words=e - s)
         return self.indptr[lo:hi + 2] - self.indptr[lo], self.indices[s:e]

@@ -48,13 +48,17 @@ def _stack() -> List[KernelLedger]:
 
 class attach:
     """Context manager scoping kernel launches to ``ledger`` (current
-    thread only). ``with attach() as kl: ...`` creates a fresh ledger."""
+    thread only). ``with attach() as kl: ...`` creates a fresh ledger.
+    Passing ``tracer=`` additionally mirrors every :func:`note` inside
+    the scope as a ``kernel.launch`` instant event on that tracer (the
+    observability layer's per-launch timeline marks)."""
 
-    def __init__(self, ledger: Optional[KernelLedger] = None):
+    def __init__(self, ledger: Optional[KernelLedger] = None, tracer=None):
         self.ledger = ledger if ledger is not None else KernelLedger()
+        self.tracer = tracer
 
     def __enter__(self) -> KernelLedger:
-        _stack().append(self.ledger)
+        _stack().append((self.ledger, self.tracer))
         return self.ledger
 
     def __exit__(self, *exc) -> bool:
@@ -63,8 +67,13 @@ class attach:
 
 
 def note(invocations: int = 1, bytes_in: int = 0, bytes_out: int = 0) -> None:
-    """Record ``invocations`` device launches on every attached ledger."""
-    for kl in _stack():
+    """Record ``invocations`` device launches on every attached ledger
+    (and emit a ``kernel.launch`` trace event per tracer-carrying
+    attachment)."""
+    for kl, tracer in _stack():
         kl.invocations += invocations
         kl.bytes_in += bytes_in
         kl.bytes_out += bytes_out
+        if tracer is not None:
+            tracer.event("kernel.launch", invocations=invocations,
+                         bytes_in=bytes_in, bytes_out=bytes_out)

@@ -1,0 +1,35 @@
+"""Unified observability layer: structured tracing + a metrics registry.
+
+Two small, dependency-free pieces every layer of the system threads
+through (PR 10):
+
+* :mod:`repro.obs.trace` — a thread-safe, nestable :class:`Tracer` whose
+  ``span()`` context managers record begin/end events (monotonic
+  timestamps, thread id, parent span) into a bounded ring buffer, with a
+  Chrome/Perfetto ``trace_event`` JSON exporter and a plain-dict
+  snapshot for tests. Tracing is noop-by-default: every instrumented
+  hot path pays exactly one ``is None`` attribute check when no tracer
+  is attached, and instrumentation never reorders or adds source reads,
+  so traced-off runs stay byte-identical to pre-instrumentation
+  behaviour.
+* :mod:`repro.obs.metrics` — a :class:`MetricsRegistry` of labeled
+  counters/gauges/histograms that *adopts* the existing ledgers
+  (``IOStats``/``BlockDevice`` tag partitions, ``KernelLedger``,
+  ``SharedSliceCache`` tenants, box-queue telemetry) instead of
+  duplicating them: adapters snapshot each ledger into one namespace
+  (``io.block_reads{tag=...}``, ``kernel.invocations{op=...}``,
+  ``box.compute_s{lane=...}``) with exact-sum invariants — per-tag and
+  per-tenant series sum to the globals by construction. Exports
+  Prometheus textfile format via ``to_prom_text()``.
+
+Engines (:class:`~repro.core.engine.TriangleEngine`,
+:class:`~repro.query.executor.QueryEngine`), the serving layer
+(:class:`~repro.serve.server.Server`) and the distributed fabric
+(:class:`~repro.parallel.fabric.Fabric`) all take optional ``tracer=``
+and ``metrics=`` knobs wiring one tracer/registry through every stage
+of a run.
+"""
+
+from .trace import Tracer, wrap_stage  # noqa: F401
+from .metrics import (MetricsRegistry, default_registry,  # noqa: F401
+                      set_default_registry)

@@ -270,8 +270,15 @@ class Fabric:
                  device: Optional[BlockDevice] = None,
                  process_index: int = 0,
                  n_processes: int = 1,
-                 use_pallas_kernels: Optional[bool] = None):
+                 use_pallas_kernels: Optional[bool] = None,
+                 tracer=None,
+                 metrics=None):
         self.query = query
+        # observability: one tracer spans planning and every shard run
+        # (each shard on its own trace lane); the registry picks up each
+        # shard engine's queue/kernel series
+        self.tracer = tracer
+        self.metrics = metrics
         self.mem_words = mem_words
         self.cache_words = int(cache_words)
         self.io_block_words = int(io_block_words)
@@ -292,7 +299,8 @@ class Fabric:
             mem_words=mem_words, cache_words=0, device=device,
             io_block_words=io_block_words, backend=backend, workers=1,
             skew=skew, heavy_threshold=heavy_threshold,
-            use_pallas_kernels=use_pallas_kernels)
+            use_pallas_kernels=use_pallas_kernels,
+            tracer=tracer)
         if n_shards is None and mesh is not None:
             n_shards = int(mesh.devices.size)
         self.n_shards = resolve_fabric_shards(n_shards)
@@ -412,7 +420,8 @@ class Fabric:
             backend=self.backend,
             workers=self.workers if workers is None else workers,
             skew=self.skew, heavy_threshold=self.heavy_threshold,
-            plan=sub, use_pallas_kernels=self.planner.use_pallas_kernels)
+            plan=sub, use_pallas_kernels=self.planner.use_pallas_kernels,
+            tracer=self.tracer, metrics=self.metrics)
 
     def shard_engine(self, shard: int) -> QueryEngine:
         """The shard's engine: fresh device, shipped sources, restricted
@@ -453,7 +462,16 @@ class Fabric:
         shard's (ascending global) box order."""
         lay = self.layout()
         eng = self.shard_engine(shard)
-        results = eng.run_boxes(mode, capacity)
+        if self.tracer is not None:
+            # each shard gets its own trace lane (a Chrome process row):
+            # stragglers and shipping skew line up side by side
+            with self.tracer.lane(f"shard{shard}"), \
+                    self.tracer.span("fabric.shard", shard=shard,
+                                     mode=mode,
+                                     n_boxes=len(lay.schedule[shard])):
+                results = eng.run_boxes(mode, capacity)
+        else:
+            results = eng.run_boxes(mode, capacity)
         shipped = sum(getattr(s, "shipped_words", 0)
                       for s in (eng.source_for(k)
                                 for k in eng.source_keys()))

@@ -110,7 +110,9 @@ class QueryStats:
     build_s: float = 0.0
     compute_s: float = 0.0
     overlap_s: float = 0.0
-    worker_utilization: float = 0.0
+    # busy/(pool*wall); None when the run was too short to measure
+    # (wall == 0 at perf_counter granularity) — see merge_queue_telemetry
+    worker_utilization: Optional[float] = None
     max_inflight_boxes: int = 0
     max_inflight_words: int = 0
     # measured block I/O on the attached BlockDevice
@@ -233,7 +235,9 @@ class QueryEngine:
                  heavy_threshold: Optional[int] = None,
                  plan: Optional[QueryPlan] = None,
                  cancel: Optional[threading.Event] = None,
-                 use_pallas_kernels: Optional[bool] = None):
+                 use_pallas_kernels: Optional[bool] = None,
+                 tracer=None,
+                 metrics=None):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
         if skew not in ("uniform", "heavy_light"):
@@ -247,6 +251,11 @@ class QueryEngine:
                     "general arities")
         self.query = query
         self.backend = backend
+        # observability: span/event recorder (obs.trace.Tracer) and the
+        # cross-layer MetricsRegistry; both None by default so the traced-
+        # off path is a single attribute check at each site
+        self.tracer = tracer
+        self.metrics = metrics
         self.mem_words = mem_words
         self.cache_words = int(cache_words)
         self.dim_ratio = dim_ratio
@@ -374,7 +383,7 @@ class QueryEngine:
                 continue
             src = raw[key]
             if self.cache_words > 0:
-                src = SliceCache(src, self.cache_words)
+                src = SliceCache(src, self.cache_words, tracer=tracer)
                 self._caches.append(src)
             self._sources[key] = src
         self._nv_all = max((s.n_nodes for s in self._sources.values()),
@@ -439,6 +448,11 @@ class QueryEngine:
         if self._plan_cache is not None \
                 and self._plan_cache[0] == self.mem_words:
             plan = self._plan_cache[1]
+        elif self.tracer is not None:
+            with self.tracer.span("query.plan", n_vars=self.n,
+                                  skew=self.skew):
+                plan = self._plan_uncached()
+            self._plan_cache = (self.mem_words, plan)
         else:
             plan = self._plan_uncached()
             self._plan_cache = (self.mem_words, plan)
@@ -589,11 +603,23 @@ class QueryEngine:
                 self.stats.device_transfer_bytes += kl.transfer_bytes
                 self.stats.max_box_device_invocations = max(
                     self.stats.max_box_device_invocations, kl.invocations)
+        if self.metrics is not None and kl is not None:
+            self.metrics.note_kernel(kl, op=self._join_op(vj))
+
+    @staticmethod
+    def _join_op(vj: VectorizedBoxJoin) -> str:
+        """The ``kernel.*{op=..}`` label of a finished box join: the lane
+        that actually executed, fallbacks resolved."""
+        if vj.used_fused:
+            return "fused"
+        if vj.used_kernel:
+            return "staged"
+        return "host"
 
     def _work_count(self, built) -> int:
         box, bound = built
         vj = self._make_join(bound, "count", lane=self._lane.get(box))
-        with kernel_ledger.attach() as kl:
+        with kernel_ledger.attach(tracer=self.tracer) as kl:
             out = vj.run()
         self._note_join(vj, kl)
         return out
@@ -606,7 +632,7 @@ class QueryEngine:
         triangle executor's box-granular overflow→rescan protocol)."""
         box, bound = built
         cap = capacity
-        with kernel_ledger.attach() as kl:
+        with kernel_ledger.attach(tracer=self.tracer) as kl:
             while True:
                 vj = self._make_join(bound, "list",
                                      lane=self._lane.get(box),
@@ -727,14 +753,17 @@ class QueryEngine:
                 workers=self.workers,
                 inflight_items=self.inflight_boxes,
                 inflight_words=inflight_words,
-                cancel=self.cancel)
+                cancel=self.cancel,
+                tracer=self.tracer)
             merge_queue_telemetry(self.stats, tele, self._stats_lock,
-                                  inflight_boxes=self.inflight_boxes)
+                                  inflight_boxes=self.inflight_boxes,
+                                  metrics=self.metrics)
             return results
         return run_box_serial(boxes, fetch=self._fetch_box,
                               build=self._build_box, work=work,
                               prefetch_depth=self.prefetch_depth,
-                              cancel=self.cancel)
+                              cancel=self.cancel,
+                              tracer=self.tracer)
 
     # -- fabric hooks -----------------------------------------------------------
     # ``repro.parallel.fabric`` plans once on a full-source engine, ships
@@ -785,7 +814,12 @@ class QueryEngine:
         else:
             raise ValueError(f"mode {mode!r} not in ('count', 'list')")
         mark = self._io_mark()
-        results = self._run(plan.boxes, work)
+        if self.tracer is not None:
+            with self.tracer.span("query.boxes", mode=mode,
+                                  n_boxes=len(plan.boxes)):
+                results = self._run(plan.boxes, work)
+        else:
+            results = self._run(plan.boxes, work)
         self._io_collect(mark)
         if mode == "count":
             self.stats.n_results = sum(int(r) for r in results
@@ -793,6 +827,8 @@ class QueryEngine:
         else:
             self.stats.n_results = sum(len(r) for r in results
                                        if r is not None)
+        if self.metrics is not None:
+            self.metrics.publish_stats(self.stats, "query", mode=mode)
         return results
 
     # -- public entry points ----------------------------------------------------

@@ -68,8 +68,8 @@ class SharedSliceCache(SliceCache):
     """One cache, many queries; floor-protected eviction (module doc)."""
 
     def __init__(self, source, budget_words: int,
-                 block_rows: Optional[int] = None):
-        super().__init__(source, budget_words, block_rows)
+                 block_rows: Optional[int] = None, tracer=None):
+        super().__init__(source, budget_words, block_rows, tracer=tracer)
         self._owner: Dict[int, object] = {}       # block id -> tenant | None
         self._tenants: Dict[object, TenantStats] = {}
         self._gone: Dict[object, TenantStats] = {}  # stats after unregister
@@ -105,6 +105,17 @@ class SharedSliceCache(SliceCache):
     def tenant_stats(self, tenant) -> TenantStats:
         with self._lock:
             return self._tenants.get(tenant) or self._gone[tenant]
+
+    def all_tenant_stats(self) -> Dict[object, TenantStats]:
+        """Every tenant's ledger, live AND departed (``unregister`` keeps
+        the final stats). The observability registry mirrors this into
+        ``cache.*{tenant=...}`` series; because every ``read_rows_for``
+        is attributed, the per-tenant counters sum exactly to the
+        inherited global ones."""
+        with self._lock:
+            out: Dict[object, TenantStats] = dict(self._gone)
+            out.update(self._tenants)
+            return out
 
     # -- attributed reads ----------------------------------------------------
 
@@ -180,6 +191,10 @@ class SharedSliceCache(SliceCache):
             vent = self._blocks.pop(victim)
             self._words -= self._entry_words(vent)
             self._uncharge(victim, vent)
+            tr = self.tracer
+            if tr is not None:
+                tr.event("cache.evict", block=victim,
+                         words=self._entry_words(vent))
 
     def _uncharge(self, bid: int, ent) -> None:
         owner = self._owner.pop(bid, None)

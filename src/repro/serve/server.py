@@ -44,6 +44,7 @@ import itertools
 import os
 import queue
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -179,6 +180,7 @@ class QueryHandle:
         self.retry_rounds: int = 0
         self._cancel = threading.Event()
         self._done = threading.Event()
+        self.submitted_at: Optional[float] = None  # perf_counter at submit
         self._result = None
         self._error: Optional[BaseException] = None
         self._stream: Optional[_PageStream] = None
@@ -255,9 +257,17 @@ class Server:
                  backend: str = "auto",
                  skew: str = "uniform",
                  heavy_threshold: Optional[int] = None,
-                 use_pallas_kernels: Optional[bool] = None):
+                 use_pallas_kernels: Optional[bool] = None,
+                 tracer=None,
+                 metrics=None):
         if not relations:
             raise ValueError("Server needs at least one relation")
+        # observability: one obs.trace.Tracer spanning every query this
+        # server runs (admission -> plan -> boxes -> pages), and one
+        # MetricsRegistry adopting the server's ledgers (device tags,
+        # shared caches, per-query latency histograms)
+        self.tracer = tracer
+        self.metrics = metrics
         self.mem_words = int(mem_words)
         self.cache_words = self.mem_words if cache_words is None \
             else int(cache_words)
@@ -292,7 +302,12 @@ class Server:
         self.caches: Dict[str, SharedSliceCache] = {}
         if self.cache_words > 0:
             for name, src in self._sources.items():
-                self.caches[name] = SharedSliceCache(src, self.cache_words)
+                self.caches[name] = SharedSliceCache(src, self.cache_words,
+                                                     tracer=tracer)
+        if metrics is not None:
+            metrics.adopt_device(self.device)
+            for name, cache in self.caches.items():
+                metrics.adopt_shared_cache(cache, relation=name)
 
         self._plans: Dict[str, object] = {}
         self._orders: Dict[tuple, Tuple[str, ...]] = {}
@@ -428,13 +443,19 @@ class Server:
 
         qid = f"q{next(self._qid)}"
         h = QueryHandle(qid, query, mode)
+        h.submitted_at = time.perf_counter()
         h.workers = self.workers_per_query if workers is None \
             else max(1, int(workers))
         h.capacity = capacity
         h.order = order
         # the admission gate: may queue (bounded) or raise AdmissionError
-        reservation = self.admission.acquire(
-            want_words, timeout=timeout, block=block, tag=qid)
+        if self.tracer is not None:
+            with self.tracer.span("serve.admission", qid=qid, mode=mode):
+                reservation = self.admission.acquire(
+                    want_words, timeout=timeout, block=block, tag=qid)
+        else:
+            reservation = self.admission.acquire(
+                want_words, timeout=timeout, block=block, tag=qid)
         h.admitted_words = reservation.words
         h.cache_floor = self.floor_words
         if stream:
@@ -453,6 +474,24 @@ class Server:
     # -- the per-query runner --------------------------------------------------
 
     def _runner(self, h: QueryHandle, reservation) -> None:
+        try:
+            if self.tracer is not None:
+                with self.tracer.span("serve.query", qid=h.qid,
+                                      mode=h.mode,
+                                      words=reservation.words):
+                    self._runner_impl(h, reservation)
+            else:
+                self._runner_impl(h, reservation)
+        finally:
+            # end-to-end latency (admission wait included: measured from
+            # submit) feeding the serve.latency_s p50/p90/p99 histograms
+            if self.metrics is not None and h.submitted_at is not None:
+                self.metrics.observe(
+                    "serve.latency_s",
+                    time.perf_counter() - h.submitted_at,
+                    mode=h.mode, status=h.status)
+
+    def _runner_impl(self, h: QueryHandle, reservation) -> None:
         views: Dict[str, TenantView] = {}
         tag_opened = False
         try:
@@ -488,7 +527,8 @@ class Server:
                               workers=h.workers, skew=self.skew,
                               heavy_threshold=self.heavy_threshold,
                               plan=plan0, cancel=h._cancel,
-                              use_pallas_kernels=self._use_pallas)
+                              use_pallas_kernels=self._use_pallas,
+                              tracer=self.tracer, metrics=self.metrics)
             plan = eng.plan()
             with self._lock:
                 if plan0 is not None:
@@ -571,6 +611,9 @@ class Server:
                     out = (i, _BoxError(e))
             if h._stream is not None and not isinstance(out[1], _BoxError):
                 h._stream.offer(out[0], out[1])
+                tr = self.tracer
+                if tr is not None:
+                    tr.event("serve.page.offer", qid=qid, box=out[0])
             return out
 
         last_err: Optional[BaseException] = None
@@ -591,9 +634,11 @@ class Server:
                 inflight_items=eng.inflight_boxes,
                 inflight_words=eng.inflight_boxes * eng.mem_words
                 if eng.mem_words is not None else None,
-                cancel=h._cancel)
+                cancel=h._cancel,
+                tracer=self.tracer)
             merge_queue_telemetry(eng.stats, tele, eng._stats_lock,
-                                  inflight_boxes=eng.inflight_boxes)
+                                  inflight_boxes=eng.inflight_boxes,
+                                  metrics=self.metrics)
             failed: List[int] = []
             for out in results:
                 if out is None:
@@ -639,6 +684,11 @@ class Server:
             eng.stats.cache_misses += st.misses
             eng.stats.cache_hit_words += st.hit_words
         h.stats = eng.stats
+        if self.metrics is not None:
+            # QueryStats published as query.*{qid=..} gauges: the run-level
+            # dataclass becomes a view the registry also holds
+            self.metrics.publish_stats(eng.stats, "query", qid=qid,
+                                       mode=h.mode)
 
     # -- solo oracle -----------------------------------------------------------
 
@@ -718,7 +768,8 @@ class Server:
                          skew=self.skew,
                          heavy_threshold=self.heavy_threshold,
                          device=self.device,
-                         use_pallas_kernels=self._use_pallas)
+                         use_pallas_kernels=self._use_pallas,
+                         tracer=self.tracer, metrics=self.metrics)
             with self.device.attributed(tag):
                 out = fab.count() if mode == "count" else fab.list(capacity)
             return out, fab.stats
